@@ -1,0 +1,55 @@
+"""Shared harness for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Topology, make_mixer, make_optimizer
+
+__all__ = ["run_algorithm", "timeit_us", "csv_row"]
+
+
+def run_algorithm(alg: str, grad_fn: Callable, x0, topo: Topology, *,
+                  alpha: float, beta: float = 0.9, steps: int, seed: int = 0,
+                  eval_every: int = 10,
+                  eval_fn: Optional[Callable] = None) -> Dict[str, jnp.ndarray]:
+    """Run a decentralized algorithm; grad_fn(x, key) -> per-agent grads.
+
+    Returns {"xs": final params, "metric": (steps//eval_every,) eval series}.
+    """
+    mix = make_mixer(topo)
+    opt = make_optimizer(alg, alpha=alpha, beta=beta, mix=mix)
+    state = opt.init(x0)
+
+    def body(carry, key):
+        x, st = carry
+        g = grad_fn(x, key)
+        x, st = opt.step(x, g, st)
+        m = eval_fn(x) if eval_fn is not None else jnp.zeros(())
+        return (x, st), m
+
+    @jax.jit
+    def run(x0, state, keys):
+        (x, st), ms = jax.lax.scan(body, (x0, state), keys)
+        return x, ms
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
+    x, ms = run(x0, state, keys)
+    return {"x": x, "metric": ms[::eval_every]}
+
+
+def timeit_us(fn: Callable, *args, iters: int = 20) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,51 @@
+"""Microbenchmarks of the gossip/optimizer hot path (CPU wall-clock; the
+derived column carries the analytically modeled TPU HBM-traffic ratio)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_mixer, ring
+from repro.core.optimizers import make_edm
+from .common import csv_row, timeit_us
+
+
+def run(verbose: bool = True) -> Dict:
+    results: Dict = {}
+    lines = []
+    topo = ring(8)
+    d = 1 << 20
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, d))
+
+    mix_dense = jax.jit(make_mixer(topo, "dense"))
+    mix_shift = jax.jit(make_mixer(topo, "shifts"))
+    us_d = timeit_us(mix_dense, x)
+    us_s = timeit_us(mix_shift, x)
+    lines.append(csv_row("gossip/dense_W", us_d, f"n=8;d={d}"))
+    lines.append(csv_row("gossip/shift_rolls", us_s,
+                         f"n=8;d={d};speedup_vs_dense={us_d / us_s:.2f}x"))
+
+    # EDM unfused vs fused-kernel step (interpret-mode Pallas on CPU — the
+    # derived column reports the modeled HBM-stream ratio, which is what
+    # matters on TPU: unfused ≈ 11 streams vs fused 7).
+    params = {"w": x}
+    grads = {"w": 0.1 * x}
+    o_un = make_edm(0.05, 0.9, make_mixer(topo), use_fused_kernel=False)
+    st = o_un.init(params)
+    step_un = jax.jit(lambda p, g, s: o_un.step(p, g, s))
+    us_un = timeit_us(step_un, params, grads, st)
+    lines.append(csv_row("edm_step/unfused_jnp", us_un,
+                         "hbm_streams=11(x,g,m,psi->m,psi,phi + mix)"))
+    lines.append(csv_row("edm_step/fused_pallas", float("nan"),
+                         "hbm_streams=7;modeled_traffic_ratio=0.64;"
+                         "validated=interpret_mode"))
+    results["csv"] = lines
+    if verbose:
+        print("\n".join("  " + l for l in lines))
+    return results
+
+
+if __name__ == "__main__":
+    print("\n".join(run()["csv"]))

@@ -1,0 +1,57 @@
+"""Paper Figure 2 — ℓ₂-regularized logistic regression (strongly convex /
+PL case), ring(32), full-batch gradients + additive N(0, σ_s²) noise,
+heterogeneity via σ_h.  Metric: ‖∇f(x̄)‖² trajectory and steady floor."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ring
+from repro.data import logistic_problem
+from .common import csv_row, run_algorithm
+
+ALGS = ["edm", "ed", "dsgd", "dmsgd", "dsgt", "dsgt_hb"]
+N, D = 32, 20
+ALPHA, BETA, STEPS = 0.5, 0.9, 1500
+SIGMA_S = 0.1
+
+
+def run(verbose: bool = True) -> Dict:
+    topo = ring(N)
+    results: Dict = {"lambda": topo.lam()}
+    for sigma_h, tag in ((0.3, "low_het"), (2.0, "high_het")):
+        stoch, full, mean_loss = logistic_problem(
+            N, d=D, sigma_h=sigma_h, sigma_s=SIGMA_S, seed=1)
+
+        def grad_norm_at_mean(x):
+            xb = jnp.mean(x, 0)
+            g = full(jnp.broadcast_to(xb[None], x.shape))
+            return jnp.sum(jnp.mean(g, 0) ** 2)
+
+        x0 = jnp.zeros((N, D))
+        for alg in ALGS:
+            t0 = time.perf_counter()
+            out = run_algorithm(alg, stoch, x0, topo, alpha=ALPHA, beta=BETA,
+                                steps=STEPS, eval_fn=grad_norm_at_mean)
+            wall = time.perf_counter() - t0
+            floor = float(jnp.mean(out["metric"][-15:]))
+            results[(alg, tag)] = floor
+            if verbose:
+                print(f"  logistic {alg:10s} {tag:9s} "
+                      f"|grad|^2_floor={floor:.3e} ({wall:.1f}s)")
+    lines = []
+    for alg in ALGS:
+        ratio = results[(alg, "high_het")] / max(results[(alg, "low_het")], 1e-12)
+        lines.append(csv_row(
+            f"logistic/{alg}", 0.0,
+            f"gradsq_lo={results[(alg, 'low_het')]:.3e};"
+            f"gradsq_hi={results[(alg, 'high_het')]:.3e};het_ratio={ratio:.2f}"))
+    results["csv"] = lines
+    return results
+
+
+if __name__ == "__main__":
+    print("\n".join(run()["csv"]))

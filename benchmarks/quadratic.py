@@ -1,0 +1,63 @@
+"""Paper Figure 1 — quadratic (linear-regression) loss, ring(32), λ≈0.99.
+
+For each heterogeneity level ζ² the paper shows: DmSGD / Quasi-Global /
+DecentLaM stall at an O(ζ²)-neighborhood while EDM / ED-D² / DSGT(-HB)
+converge to the σ²-limited floor regardless of ζ².  We measure the final
+mean distance-to-optimum per algorithm and its sensitivity to ζ².
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ring
+from repro.data import quadratic_problem
+from .common import csv_row, run_algorithm
+
+ALGS = ["edm", "ed", "dsgd", "dmsgd", "dsgt", "dsgt_hb", "decentlam", "qg"]
+N, D, PDIM = 32, 10, 20
+ALPHA, BETA, STEPS = 0.05, 0.9, 3000
+SIGMA = 0.05
+
+
+def run(verbose: bool = True) -> Dict:
+    topo = ring(N)
+    rows = []
+    results: Dict = {"lambda": topo.lam()}
+    for c, tag in ((100.0, "low_het"), (1.0, "high_het")):
+        stoch, full, x_opt, zeta2 = quadratic_problem(
+            N, d=D, p=PDIM, c=c, sigma=SIGMA, seed=0)
+        x0 = jnp.zeros((N, D))
+
+        def err(x, x_opt=x_opt):
+            return jnp.mean(jnp.sum((x - x_opt[None]) ** 2, -1))
+
+        for alg in ALGS:
+            t0 = time.perf_counter()
+            out = run_algorithm(alg, stoch, x0, topo, alpha=ALPHA, beta=BETA,
+                                steps=STEPS, eval_fn=err)
+            wall = time.perf_counter() - t0
+            # steady-state floor: mean over the last 10% of evals
+            floor = float(jnp.mean(out["metric"][-30:]))
+            results[(alg, tag)] = floor
+            rows.append((alg, tag, zeta2, floor, wall))
+            if verbose:
+                print(f"  quadratic {alg:10s} {tag:9s} zeta2={zeta2:9.3f} "
+                      f"floor={floor:.3e} ({wall:.1f}s)")
+    lines = []
+    for alg in ALGS:
+        ratio = results[(alg, "high_het")] / max(results[(alg, "low_het")], 1e-12)
+        lines.append(csv_row(f"quadratic/{alg}", 0.0,
+                             f"floor_lo={results[(alg, 'low_het')]:.3e};"
+                             f"floor_hi={results[(alg, 'high_het')]:.3e};"
+                             f"het_ratio={ratio:.2f}"))
+    results["csv"] = lines
+    return results
+
+
+if __name__ == "__main__":
+    r = run()
+    print("\n".join(r["csv"]))

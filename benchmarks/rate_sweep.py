@@ -1,0 +1,70 @@
+"""Paper Table 1 — empirical convergence-rate structure of EDM.
+
+Two checks, matching the theory:
+ 1. Spectral-gap scaling: with σ=0 and fixed heterogeneity, EDM's transient
+    heterogeneity term decays with T (rate O(α²ζ₀²/(1-λ)²/T)) — so the error
+    after a fixed horizon grows when the ring gets sparser, but still → 0;
+    DmSGD's *steady-state* error grows like (1-λ)⁻² and does NOT decay.
+ 2. Momentum invariance: EDM's bound has no (1-β)⁻¹ step-size restriction —
+    convergence floor is ~flat across β ∈ {0, 0.5, 0.9} at fixed α.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core import ring
+from repro.data import quadratic_problem
+from .common import csv_row, run_algorithm
+
+
+def run(verbose: bool = True) -> Dict:
+    results: Dict = {}
+    lines = []
+    # --- 1. spectral gap sweep (deterministic grads, heterogeneity on) -----
+    for n in (8, 16, 32):
+        topo = ring(n)
+        stoch, full, x_opt, zeta2 = quadratic_problem(n, c=1.0, sigma=0.0,
+                                                      seed=2)
+        x0 = jnp.zeros((n, x_opt.shape[0]))
+
+        def err(x, x_opt=x_opt):
+            return jnp.mean(jnp.sum((x - x_opt[None]) ** 2, -1))
+
+        for alg in ("edm", "dmsgd"):
+            out = run_algorithm(alg, lambda x, k: full(x), x0, topo,
+                                alpha=0.05, beta=0.9, steps=4000, eval_fn=err)
+            floor = float(jnp.mean(out["metric"][-10:]))
+            results[(alg, n)] = floor
+            if verbose:
+                print(f"  rate_sweep {alg:6s} ring({n:2d}) 1-λ="
+                      f"{topo.spectral_gap():.4f} err_T={floor:.3e}")
+        lines.append(csv_row(
+            f"rate_sweep/ring{n}", 0.0,
+            f"gap={topo.spectral_gap():.5f};edm={results[('edm', n)]:.3e};"
+            f"dmsgd={results[('dmsgd', n)]:.3e}"))
+
+    # --- 2. momentum invariance of EDM -------------------------------------
+    topo = ring(32)
+    stoch, full, x_opt, zeta2 = quadratic_problem(32, c=1.0, sigma=0.05, seed=3)
+    x0 = jnp.zeros((32, x_opt.shape[0]))
+
+    def err(x):
+        return jnp.mean(jnp.sum((x - x_opt[None]) ** 2, -1))
+
+    for beta in (0.0, 0.5, 0.9):
+        out = run_algorithm("edm", stoch, x0, topo, alpha=0.05, beta=beta,
+                            steps=3000, eval_fn=err)
+        floor = float(jnp.mean(out["metric"][-30:]))
+        results[("edm_beta", beta)] = floor
+        if verbose:
+            print(f"  rate_sweep edm beta={beta} floor={floor:.3e}")
+        lines.append(csv_row(f"rate_sweep/edm_beta{beta}", 0.0,
+                             f"floor={floor:.3e}"))
+    results["csv"] = lines
+    return results
+
+
+if __name__ == "__main__":
+    print("\n".join(run()["csv"]))

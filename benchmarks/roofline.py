@@ -1,0 +1,62 @@
+"""Roofline table generator — reads the dry-run JSONs (experiments/dryrun/)
+and emits the §Roofline table: three terms, dominant bottleneck, useful-FLOP
+fraction, per (arch × shape × mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(tag: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(BASE, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        mesh_part = parts[2] if len(parts) > 2 else ""
+        rec_tag = mesh_part.split("_", 1)[1] if "_" in mesh_part else ""
+        if rec_tag != tag:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':7s} {'ok':3s} "
+           f"{'t_comp(s)':>10s} {'t_mem(s)':>10s} {'t_coll(s)':>10s} "
+           f"{'bound':10s} {'useful%':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        rf = r.get("roofline", {})
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:7s} "
+            f"{'y' if r.get('ok') else 'N':3s} "
+            f"{rf.get('t_compute_s', 0):10.3e} {rf.get('t_memory_s', 0):10.3e} "
+            f"{rf.get('t_collective_s', 0):10.3e} "
+            f"{rf.get('bottleneck', '-'):10s} "
+            f"{100 * rf.get('useful_flop_frac', 0):8.1f}")
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True) -> Dict:
+    recs = load_records()
+    ok = [r for r in recs if r.get("ok")]
+    out = {"n_records": len(recs), "n_ok": len(ok)}
+    if verbose:
+        print(table(recs))
+        print(f"\n{len(ok)}/{len(recs)} combos compiled OK")
+    bounds = {}
+    for r in ok:
+        b = r["roofline"]["bottleneck"]
+        bounds[b] = bounds.get(b, 0) + 1
+    out["csv"] = [f"roofline/summary,0.0,ok={len(ok)}/{len(recs)};"
+                  + ";".join(f"{k}={v}" for k, v in sorted(bounds.items()))]
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human-readable progress).
+Figure/table mapping:
+
+  quadratic   → paper Fig 1   (quadratic loss, ζ² sweep)
+  logistic    → paper Fig 2   (strongly-convex / PL case)
+  nonconvex   → paper Figs 3-4 (Dirichlet-φ label skew)
+  rate_sweep  → paper Table 1 (rate structure: spectral gap + β invariance)
+  gossip      → systems microbench (mixing engines, fused kernel)
+  roofline    → §Roofline summary from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: quadratic,logistic,"
+                         "nonconvex,rate_sweep,gossip,roofline")
+    args = ap.parse_args()
+
+    from . import ablations, gossip_micro, logistic, nonconvex, quadratic
+    from . import rate_sweep, roofline
+
+    suites = {
+        "quadratic": quadratic.run,
+        "logistic": logistic.run,
+        "nonconvex": nonconvex.run,
+        "rate_sweep": rate_sweep.run,
+        "ablations": ablations.run,
+        "gossip": gossip_micro.run,
+        "roofline": roofline.run,
+    }
+    selected = (args.only.split(",") if args.only else list(suites))
+
+    all_csv = ["name,us_per_call,derived"]
+    for name in selected:
+        print(f"== {name} ==", flush=True)
+        res = suites[name](verbose=True)
+        all_csv.extend(res.get("csv", []))
+
+    print("\n".join(all_csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver: decentralized EDM training of a ~100M-parameter LM.
+
+Trains a 12-layer / d=768 llama-style model (≈108M params — smollm-family
+reduced depth) across 4 decentralized agents on a ring, on synthetic
+heterogeneous token streams (per-agent Dirichlet-tilted unigram over a shared
+Markov backbone), with the full production train-step (vmap'd per-agent grads
+→ EDM momentum/adapt/correct → ring gossip) and checkpointing.
+
+  PYTHONPATH=src python examples/decentralized_lm_train.py            # demo
+  PYTHONPATH=src python examples/decentralized_lm_train.py --steps 300 --full
+
+This is the same `build_train_step` the 512-chip dry-run lowers; here it runs
+on 1 CPU device with the agent axis unsharded.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train import build_train_step, checkpoint, init_state, make_topology
+
+
+def lm_100m(full: bool) -> ModelConfig:
+    return ModelConfig(
+        name="edm-lm-108m", family="dense",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        d_ff=2048, vocab_size=24576, rope_theta=1e4,
+        dtype="float32",
+    ) if full else ModelConfig(
+        name="edm-lm-11m", family="dense",
+        n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+        d_ff=768, vocab_size=8192, rope_theta=1e4, dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=1, help="per-agent batch")
+    ap.add_argument("--alpha", type=float, default=0.2)
+    ap.add_argument("--beta", type=float, default=0.9)
+    ap.add_argument("--algorithm", default="edm")
+    ap.add_argument("--full", action="store_true",
+                    help="use the ~108M-param config (slow on 1 CPU core)")
+    ap.add_argument("--ckpt", default="/tmp/edm_lm.npz")
+    args = ap.parse_args()
+
+    cfg = lm_100m(args.full)
+    model = build_model(cfg)
+    n_p = cfg.n_params()
+    print(f"model {cfg.name}: {n_p/1e6:.1f}M params, "
+          f"{args.agents} agents on a ring")
+
+    run = RunConfig(global_batch=args.agents * args.batch, seq_len=args.seq,
+                    algorithm=args.algorithm, alpha=args.alpha, beta=args.beta,
+                    topology="ring", remat=False)
+    topo = make_topology(run, args.agents)
+    print(f"topology: ring({args.agents})  lambda={topo.lam():.4f}")
+
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       n_agents=args.agents, phi=0.2)  # heterogeneous
+    state = init_state(model, run, args.agents, jax.random.PRNGKey(0))
+    step_fn = jax.jit(build_train_step(model, run, topo))
+
+    key = jax.random.PRNGKey(1)
+    t_start = time.time()
+    for t in range(args.steps):
+        key, kd = jax.random.split(key)
+        batch = data.sample(kd, args.batch)
+        state, metrics = step_fn(state, batch)
+        if t % 10 == 0 or t == args.steps - 1:
+            print(f"step {t:4d}  loss={float(metrics['loss']):.4f}  "
+                  f"consensus={float(metrics['consensus']):.3e}  "
+                  f"|g|={float(metrics['grad_norm']):.3f}  "
+                  f"({(time.time()-t_start):.1f}s)", flush=True)
+
+    checkpoint.save(args.ckpt, state["params"])
+    print(f"saved agent-replica params to {args.ckpt}")
+    restored = checkpoint.load(args.ckpt, state["params"])
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree.leaves(restored),
+                               jax.tree.leaves(state["params"])))
+    print(f"checkpoint roundtrip max|Δ| = {diff:.1e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper-figure reproduction driver: sweeps heterogeneity and prints the
+Fig-1-style comparison table for all 8 implemented algorithms.
+
+  PYTHONPATH=src python examples/heterogeneity_sweep.py
+"""
+import jax.numpy as jnp
+
+from repro.core import ALGORITHMS, make_mixer, make_optimizer, ring
+from repro.data import quadratic_problem
+
+
+def main():
+    n, steps = 32, 3000
+    topo = ring(n)
+    print(f"ring({n})  lambda={topo.lam():.4f}   (paper Fig. 1 setup)\n")
+    header = f"{'zeta^2':>10s} " + " ".join(f"{a:>10s}" for a in sorted(ALGORITHMS))
+    print(header)
+    for c in (100.0, 3.0, 1.0, 0.3):
+        stoch, full, x_opt, zeta2 = quadratic_problem(n, c=c, sigma=0.05,
+                                                      seed=0)
+        row = [f"{zeta2:10.3f}"]
+        for alg in sorted(ALGORITHMS):
+            mix = make_mixer(topo)
+            opt = make_optimizer(alg, alpha=0.05, beta=0.9, mix=mix)
+            x = jnp.zeros((n, x_opt.shape[0]))
+            state = opt.init(x)
+            import jax
+            key = jax.random.PRNGKey(0)
+
+            @jax.jit
+            def body(carry, k):
+                x, st = carry
+                x, st = opt.step(x, stoch(x, k), st)
+                return (x, st), None
+
+            (x, state), _ = jax.lax.scan(body, (x, state),
+                                         jax.random.split(key, steps))
+            err = float(jnp.mean(jnp.sum((x - x_opt[None]) ** 2, -1)))
+            row.append(f"{err:10.2e}")
+        print(" ".join(row))
+    print("\nEDM/ED floors are flat in zeta^2; DmSGD-family floors grow ~ zeta^2.")
+
+
+if __name__ == "__main__":
+    main()

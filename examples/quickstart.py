@@ -1,0 +1,39 @@
+"""Quickstart — the paper in 60 seconds.
+
+Runs EDM vs DmSGD on the paper's §E.1 quadratic problem over a sparse ring
+of 32 agents with strong data heterogeneity and full-batch gradients (σ=0).
+EDM (bias-corrected) reaches the exact optimum; DmSGD stalls at the
+heterogeneity floor (Proposition 2 of Yuan et al. 2021, quoted in the paper).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import make_mixer, make_optimizer, ring
+from repro.data import quadratic_problem
+
+
+def main():
+    n = 32
+    topo = ring(n)
+    print(f"ring({n}): lambda = {topo.lam():.4f}  spectral gap = "
+          f"{topo.spectral_gap():.4f}")
+    stoch, full, x_opt, zeta2 = quadratic_problem(n, c=1.0, sigma=0.0, seed=0)
+    print(f"data heterogeneity  zeta^2 = {zeta2:.2f}\n")
+
+    mix = make_mixer(topo)
+    for alg in ("edm", "dmsgd"):
+        opt = make_optimizer(alg, alpha=0.05, beta=0.9, mix=mix)
+        x = jnp.zeros((n, x_opt.shape[0]))
+        state = opt.init(x)
+        print(f"--- {alg} ---")
+        for t in range(3001):
+            x, state = opt.step(x, full(x), state)
+            if t % 500 == 0:
+                err = float(jnp.mean(jnp.sum((x - x_opt[None]) ** 2, -1)))
+                print(f"  step {t:5d}  mean ||x_i - x*||^2 = {err:.3e}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

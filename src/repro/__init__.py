@@ -1,0 +1,6 @@
+"""repro — EDM (Exact-Diffusion with Momentum) production training framework.
+
+Paper: "A Bias-Correction Decentralized Stochastic Gradient Algorithm with
+Momentum Acceleration" (Hu, Chen, Liu & Mao, 2025).
+"""
+__version__ = "1.0.0"

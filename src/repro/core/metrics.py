@@ -1,0 +1,50 @@
+"""Diagnostics used throughout the paper's analysis and our experiments."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "agent_mean",
+    "consensus_distance",
+    "grad_norm_at_mean",
+    "heterogeneity_zeta2",
+    "tree_sqnorm",
+]
+
+
+def tree_sqnorm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def agent_mean(tree: Any) -> Any:
+    """x̄ = (1/n) Σ_i x_i  over the leading agent axis."""
+    return jax.tree.map(lambda l: jnp.mean(l, axis=0, keepdims=True), tree)
+
+
+def consensus_distance(tree: Any) -> jax.Array:
+    """‖X − X̄‖²_F — the paper's deviation term E‖P_I X‖²."""
+    mean = agent_mean(tree)
+    return tree_sqnorm(jax.tree.map(lambda x, m: x - m, tree, mean))
+
+
+def grad_norm_at_mean(grad_fn, params: Any) -> jax.Array:
+    """‖∇f(x̄)‖² where grad_fn maps a single-agent pytree to its gradient."""
+    mean = jax.tree.map(lambda l: jnp.mean(l, axis=0), params)
+    return tree_sqnorm(grad_fn(mean))
+
+
+def heterogeneity_zeta2(per_agent_grads: Any) -> jax.Array:
+    """ζ² = (1/n) Σ_i ‖∇f_i − ∇f‖²  evaluated at a common point
+    (per_agent_grads leaves: (A, ...))."""
+    mean = agent_mean(per_agent_grads)
+    dev = jax.tree.map(lambda g, m: g - m, per_agent_grads, mean)
+    n = jax.tree.leaves(per_agent_grads)[0].shape[0]
+    return consensus_distance_from_dev(dev) / n
+
+
+def consensus_distance_from_dev(dev: Any) -> jax.Array:
+    return tree_sqnorm(dev)

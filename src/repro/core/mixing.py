@@ -1,0 +1,125 @@
+"""Mixing engines: apply W to a pytree with a leading agent axis.
+
+Two interchangeable engines (tests assert they agree to float tolerance):
+
+* :func:`mix_dense`  — explicit ``einsum('ij,j...->i...', W, x)``.  Used for
+  paper-scale simulation and as the oracle.
+* :func:`mix_shifts` — weighted sum of ``jnp.roll`` terms.  On a sharded agent
+  axis XLA lowers every roll to a ``collective-permute`` — this is the
+  production gossip path (DESIGN §3).
+
+Both operate leaf-wise on arbitrary pytrees whose leaves have leading dim
+``A = n_agents``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .topology import Topology
+
+__all__ = ["mix_dense", "mix_shifts", "mix_ppermute", "make_mixer"]
+
+
+def _mix_leaf_dense(W: jax.Array, x: jax.Array) -> jax.Array:
+    # x: (A, ...) -> contract over agent axis.
+    flat = x.reshape(x.shape[0], -1)
+    out = (W.astype(flat.dtype) @ flat) if flat.dtype != jnp.bfloat16 else (
+        W.astype(jnp.float32) @ flat.astype(jnp.float32)
+    ).astype(jnp.bfloat16)
+    return out.reshape(x.shape)
+
+
+def mix_dense(topo: Topology, tree: Any) -> Any:
+    """Oracle engine: explicit dense W matmul over the agent axis."""
+    W = jnp.asarray(topo.dense_matrix(), dtype=jnp.float32)
+    return jax.tree.map(functools.partial(_mix_leaf_dense, W), tree)
+
+
+def _mix_leaf_shifts(topo: Topology, x: jax.Array) -> jax.Array:
+    A = x.shape[0]
+    assert A == topo.n_agents, (A, topo.n_agents)
+    if topo.grid is not None:
+        P, D = topo.grid
+    else:
+        P, D = 1, A
+    acc = None
+    for t in topo.terms:
+        if t.shift == 0 or (t.level == "flat" and A == 1):
+            term = x * t.weight
+        elif t.level == "flat":
+            term = jnp.roll(x, t.shift, axis=0) * t.weight
+        else:
+            # reshape agent axis to the (P, D) grid; roll the right sub-axis.
+            g = x.reshape((P, D) + x.shape[1:])
+            axis = 0 if t.level == "inter" else 1
+            term = (jnp.roll(g, t.shift, axis=axis) * t.weight).reshape(x.shape)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def mix_shifts(topo: Topology, tree: Any) -> Any:
+    """Production engine: W as a weighted sum of agent-axis rolls
+    (→ collective-permute on a sharded mesh)."""
+    return jax.tree.map(functools.partial(_mix_leaf_shifts, topo), tree)
+
+
+def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any) -> Any:
+    """Explicit-collective engine: ``shard_map`` + ``jax.lax.ppermute``.
+
+    The agent axis is *consumed* by the mesh (one agent per mesh slice along
+    ``agent_axes``); every gossip term becomes one ppermute with a literal
+    source→target ring.  This is the manual-control twin of :func:`mix_shifts`
+    (which leaves the permute scheduling to GSPMD) — useful when the compiler's
+    roll lowering must be pinned, and as an executable spec of the paper's
+    communication pattern.  Leaves must carry the leading agent axis; only
+    "flat" topologies are supported (hierarchical ones decompose into two
+    nested calls).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    names = agent_axes if isinstance(agent_axes, tuple) else (agent_axes,)
+    A = 1
+    for n in names:
+        A *= mesh.devices.shape[mesh.axis_names.index(n)]
+    assert A == topo.n_agents, (A, topo.n_agents)
+    assert all(t.level == "flat" for t in topo.terms), \
+        "ppermute engine supports flat (circulant) topologies"
+    axis = names if len(names) > 1 else names[0]
+
+    def body(*leaves):
+        out = []
+        for x in leaves:
+            # x: (1, *shape) — this shard's agent replica
+            acc = None
+            for t in topo.terms:
+                if t.shift == 0:
+                    term = x * t.weight
+                else:
+                    perm = [((i - t.shift) % A, i) for i in range(A)]
+                    term = jax.lax.ppermute(x, axis, perm) * t.weight
+                acc = term if acc is None else acc + term
+            out.append(acc)
+        return tuple(out)
+
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    specs = tuple(P(axis) for _ in flat)
+    out = jax.shard_map(body, mesh=mesh, in_specs=specs, out_specs=specs,
+                        check_vma=False)(*flat)
+    return jax.tree_util.tree_unflatten(treedef, list(out))
+
+
+def make_mixer(topo: Topology, engine: str = "shifts", mesh=None,
+               agent_axes=None):
+    """Return ``mix(tree) -> tree``.  engine ∈ {"dense", "shifts", "ppermute"}."""
+    if engine == "dense":
+        return functools.partial(mix_dense, topo)
+    if engine == "shifts":
+        return functools.partial(mix_shifts, topo)
+    if engine == "ppermute":
+        assert mesh is not None and agent_axes is not None
+        return functools.partial(mix_ppermute, topo, mesh, agent_axes)
+    raise ValueError(f"unknown mixing engine: {engine}")

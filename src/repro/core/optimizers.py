@@ -1,0 +1,298 @@
+"""Decentralized stochastic optimizers behind one functional API.
+
+Every algorithm operates on pytrees with a **leading agent axis A** and a
+gossip operator ``mix(tree) -> tree`` (see :mod:`repro.core.mixing`).  The
+same code therefore runs the paper's n=32 ring simulation on one CPU device
+and the 512-chip production mesh (agent axis sharded over ('pod','data')).
+
+Implemented algorithms (paper §5 / Table 1 comparison set):
+
+===========  ==================================================================
+EDM          **the paper's contribution** — Exact-Diffusion with Momentum
+ED/D²        Yuan et al. 2020 / Tang et al. 2018 (= EDM with β=0)
+DSGD         Lian et al. 2017 plain decentralized SGD
+DmSGD        Yu et al. 2019 decentralized momentum SGD
+DSGT         Zhang & You 2019 stochastic gradient tracking
+DSGT-HB      Gao et al. 2023 gradient tracking + heavy ball
+DecentLaM    Yuan et al. 2021 large-batch decentralized momentum
+QG-DmSGD     Lin et al. 2021 quasi-global momentum
+===========  ==================================================================
+
+API::
+
+    opt = make_optimizer("edm", alpha=0.05, beta=0.9, mix=make_mixer(topo))
+    state  = opt.init(params)                  # params leaves: (A, ...)
+    params, state = opt.step(params, grads, state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Grads = Any
+State = Dict[str, Any]
+Mixer = Callable[[Any], Any]
+
+__all__ = ["DecOptimizer", "make_optimizer", "ALGORITHMS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecOptimizer:
+    name: str
+    init: Callable[[Params], State]
+    step: Callable[[Params, Grads, State], tuple]
+
+
+def _zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def _axpy(a, x, y):  # a*x + y, leafwise
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def _lincomb(*pairs):
+    """sum(c_k * tree_k) leafwise."""
+    coeffs = [c for c, _ in pairs]
+    trees = [t for _, t in pairs]
+
+    def f(*leaves):
+        out = coeffs[0] * leaves[0]
+        for c, l in zip(coeffs[1:], leaves[1:]):
+            out = out + c * l
+        return out
+
+    return jax.tree.map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+# EDM — the paper's Algorithm 1
+# ---------------------------------------------------------------------------
+
+def make_edm(alpha: float, beta: float, mix: Mixer,
+             use_fused_kernel: bool = False) -> DecOptimizer:
+    """Exact-Diffusion with Momentum (paper Algorithm 1).
+
+    Per agent i:
+        m   ← β m + (1-β) g
+        ψ'  ← x − α m                   (adapt)
+        φ   ← ψ' + x − ψ                (correct: the ED/D² bias correction)
+        x   ← Σ_j w_ij φ_j              (combine: gossip)
+    State: {m, psi}, ψ(0) = x(0) so that step 0 reduces to x ← W(x − α m).
+    With β = 0 this is exactly ED/D².
+
+    ``use_fused_kernel=True`` routes the elementwise chain through the Pallas
+    ``edm_update`` kernel (kernels/edm_update.py) — TPU target; on CPU the
+    kernel runs in interpret mode (tests) and the jnp chain is the default.
+    """
+
+    def init(params: Params) -> State:
+        return {"m": _zeros_like(params), "psi": jax.tree.map(jnp.asarray, params)}
+
+    def step(params: Params, grads: Grads, state: State):
+        if use_fused_kernel:
+            from repro.kernels import ops as kops
+            m_new, phi, psi_new = kops.edm_update_tree(
+                params, grads, state["m"], state["psi"], alpha=alpha, beta=beta)
+        else:
+            m_new = _lincomb((beta, state["m"]), ((1.0 - beta), grads))
+            psi_new = _lincomb((1.0, params), (-alpha, m_new))
+            # φ = ψ_new + x − ψ_prev
+            phi = _lincomb((1.0, psi_new), (1.0, params), (-1.0, state["psi"]))
+        new_params = mix(phi)
+        return new_params, {"m": m_new, "psi": psi_new}
+
+    return DecOptimizer("edm", init, step)
+
+
+def make_ed(alpha: float, mix: Mixer, **_) -> DecOptimizer:
+    """ED/D² — momentum-free exact diffusion (EDM with β=0)."""
+    opt = make_edm(alpha, 0.0, mix)
+    return DecOptimizer("ed", opt.init, opt.step)
+
+
+def make_edm_ef(alpha: float, beta: float, mix: Mixer,
+                compress_dtype: str = "bfloat16", **_) -> DecOptimizer:
+    """EDM with error-feedback-compressed gossip (beyond-paper).
+
+    Naive low-precision gossip payloads inflate EDM's floor ~200×
+    (benchmarks/ablations.py): the correction φ = ψ' + x − ψ is a small
+    difference of large iterates, so rounding it injects a *persistent* bias
+    amplified by (1−λ)⁻¹.  Classic error feedback fixes this: each agent
+    sends Q(φ + e) and keeps the quantization residual e locally —
+
+        c   = φ + e
+        φ̃  = Q(c)              (bf16 round-trip: the wire payload)
+        e'  = c − φ̃            (carried to the next round)
+        x'  = W φ̃
+
+    The injected error is no longer persistent (it is re-sent next step), so
+    the floor returns to the uncompressed level while DCI bytes halve.
+    """
+    dt = jnp.dtype(compress_dtype)
+
+    def init(params: Params) -> State:
+        return {"m": _zeros_like(params),
+                "psi": jax.tree.map(jnp.asarray, params),
+                "e": _zeros_like(params)}
+
+    def step(params: Params, grads: Grads, state: State):
+        m_new = _lincomb((beta, state["m"]), ((1.0 - beta), grads))
+        psi_new = _lincomb((1.0, params), (-alpha, m_new))
+        phi = _lincomb((1.0, psi_new), (1.0, params), (-1.0, state["psi"]))
+        corr = _lincomb((1.0, phi), (1.0, state["e"]))
+        payload = jax.tree.map(lambda c: c.astype(dt).astype(c.dtype), corr)
+        e_new = _lincomb((1.0, corr), (-1.0, payload))
+        new_params = mix(payload)
+        return new_params, {"m": m_new, "psi": psi_new, "e": e_new}
+
+    return DecOptimizer("edm_ef", init, step)
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def make_dsgd(alpha: float, mix: Mixer, **_) -> DecOptimizer:
+    """x ← W(x − α g)   (Lian et al. 2017; adapt-then-combine)."""
+
+    def init(params):
+        return {}
+
+    def step(params, grads, state):
+        return mix(_lincomb((1.0, params), (-alpha, grads))), state
+
+    return DecOptimizer("dsgd", init, step)
+
+
+def make_dmsgd(alpha: float, beta: float, mix: Mixer, **_) -> DecOptimizer:
+    """DmSGD (Yu et al. 2019), eqs. (3.2)-(3.3) of the paper:
+        m ← β m + (1-β) g ;  x ← W(x − α m).
+    Suffers the O(α²ζ²/((1-β)²(1-λ)²)) inconsistency bias the paper removes.
+    """
+
+    def init(params):
+        return {"m": _zeros_like(params)}
+
+    def step(params, grads, state):
+        m = _lincomb((beta, state["m"]), (1.0 - beta, grads))
+        x = mix(_lincomb((1.0, params), (-alpha, m)))
+        return x, {"m": m}
+
+    return DecOptimizer("dmsgd", init, step)
+
+
+def make_dsgt(alpha: float, mix: Mixer, **_) -> DecOptimizer:
+    """DSGT (Zhang & You 2019; Pu & Nedić 2021), ATC form:
+
+        y^t = W y^{t-1} + g^t − g^{t-1}        (gradient tracking)
+        x^{t+1} = W (x^t − α y^t)
+
+    State carries (y, g_prev, initialized-flag folded into g_prev=0, y=0:
+    at t=0, y = g which matches the standard y⁰ = g⁰ initialization).
+    """
+
+    def init(params):
+        return {"y": _zeros_like(params), "g_prev": _zeros_like(params)}
+
+    def step(params, grads, state):
+        y = _lincomb((1.0, mix(state["y"])), (1.0, grads), (-1.0, state["g_prev"]))
+        x = mix(_lincomb((1.0, params), (-alpha, y)))
+        return x, {"y": y, "g_prev": grads}
+
+    return DecOptimizer("dsgt", init, step)
+
+
+def make_dsgt_hb(alpha: float, beta: float, mix: Mixer, **_) -> DecOptimizer:
+    """DSGT with heavy-ball momentum (Gao et al. 2023, DSGT-HB):
+
+        y ← W y + g − g_prev
+        m ← β m + (1-β) y
+        x ← W (x − α m)
+    """
+
+    def init(params):
+        return {"y": _zeros_like(params), "g_prev": _zeros_like(params),
+                "m": _zeros_like(params)}
+
+    def step(params, grads, state):
+        y = _lincomb((1.0, mix(state["y"])), (1.0, grads), (-1.0, state["g_prev"]))
+        m = _lincomb((beta, state["m"]), (1.0 - beta, y))
+        x = mix(_lincomb((1.0, params), (-alpha, m)))
+        return x, {"y": y, "g_prev": grads, "m": m}
+
+    return DecOptimizer("dsgt_hb", init, step)
+
+
+def make_decentlam(alpha: float, beta: float, mix: Mixer, **_) -> DecOptimizer:
+    """DecentLaM (Yuan et al. 2021): momentum applied *outside* the gossip —
+
+        m ← β m + (1-β) g ;  x ← W x − α m
+
+    which removes the momentum-amplified bias of DmSGD but keeps the ζ² floor.
+    """
+
+    def init(params):
+        return {"m": _zeros_like(params)}
+
+    def step(params, grads, state):
+        m = _lincomb((beta, state["m"]), (1.0 - beta, grads))
+        x = _lincomb((1.0, mix(params)), (-alpha, m))
+        return x, {"m": m}
+
+    return DecOptimizer("decentlam", init, step)
+
+
+def make_qg(alpha: float, beta: float, mix: Mixer, **_) -> DecOptimizer:
+    """Quasi-Global momentum (Lin et al. 2021): the momentum buffer tracks the
+    motion of the *locally observed global* iterate rather than raw gradients:
+
+        x½ ← x − α (g + β m)
+        x' ← W x½
+        m  ← β m + (1-β) (x − x') / α
+    """
+
+    def init(params):
+        return {"m": _zeros_like(params)}
+
+    def step(params, grads, state):
+        d = _lincomb((1.0, grads), (beta, state["m"]))
+        x_new = mix(_lincomb((1.0, params), (-alpha, d)))
+        m = _lincomb(
+            (beta, state["m"]),
+            ((1.0 - beta) / alpha, _lincomb((1.0, params), (-1.0, x_new))),
+        )
+        return x_new, {"m": m}
+
+    return DecOptimizer("qg", init, step)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+ALGORITHMS = {
+    "edm": make_edm,
+    "edm_ef": make_edm_ef,
+    "ed": make_ed,
+    "dsgd": make_dsgd,
+    "dmsgd": make_dmsgd,
+    "dsgt": make_dsgt,
+    "dsgt_hb": make_dsgt_hb,
+    "decentlam": make_decentlam,
+    "qg": make_qg,
+}
+
+
+def make_optimizer(name: str, alpha: float, mix: Mixer, beta: float = 0.9,
+                   **kwargs) -> DecOptimizer:
+    if name not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {name!r}; have {sorted(ALGORITHMS)}")
+    fn = ALGORITHMS[name]
+    if name in ("dsgd", "dsgt", "ed"):
+        return fn(alpha=alpha, mix=mix, **kwargs)
+    return fn(alpha=alpha, beta=beta, mix=mix, **kwargs)

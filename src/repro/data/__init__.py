@@ -1,0 +1,4 @@
+"""repro.data — synthetic pipelines + the paper's experiment generators."""
+from .synthetic import (  # noqa: F401
+    SyntheticLM, dirichlet_partition, logistic_problem, quadratic_problem,
+)

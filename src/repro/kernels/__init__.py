@@ -1,0 +1,3 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical hot spots:
+fused EDM optimizer update + gossip combine, and flash GQA attention."""
+from . import ops, ref  # noqa: F401

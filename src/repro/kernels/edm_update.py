@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused EDM optimizer update (+ ring-gossip combine).
+
+The EDM hot loop is memory-bound: the unfused jnp chain
+
+    m'  = β m + (1-β) g
+    ψ'  = x − α m'
+    φ   = ψ' + x − ψ
+
+reads x, g, m, ψ and writes m', ψ', φ as ~7 separate HBM-stream kernels
+(XLA fuses some, but the optimizer-state round trip still dominates at
+multi-billion-parameter scale).  This kernel performs the whole chain in one
+pass over VMEM tiles: 4 reads + 3 writes = 7 HBM touches of N elements total,
+the information-theoretic minimum.
+
+``gossip_axpy`` fuses the post-permute ring combine  w₀·c + w₁·l + w₂·r
+(center/left/right neighbor payloads) into one pass — applied after the
+collective-permutes that `jnp.roll` lowers to.
+
+Layout: parameters are flattened and tiled to (rows, 128) f32; one grid step
+processes a (BLOCK_ROWS, 128) tile — 8×128-aligned for the VPU, comfortably
+inside the ~16 MB VMEM budget at the default 512×128×4 B×7 buffers ≈ 1.8 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["edm_update_flat", "gossip_axpy_flat", "BLOCK_ROWS", "LANE"]
+
+BLOCK_ROWS = 512
+LANE = 128
+
+
+def _edm_kernel(x_ref, g_ref, m_ref, psi_ref, m_out, psi_out, phi_out, *,
+                alpha: float, beta: float):
+    x = x_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    psi = psi_ref[...]
+    m_new = beta * m + (1.0 - beta) * g
+    psi_new = x - alpha * m_new
+    phi = psi_new + x - psi
+    m_out[...] = m_new
+    psi_out[...] = psi_new
+    phi_out[...] = phi
+
+
+def edm_update_flat(x, g, m, psi, *, alpha: float, beta: float,
+                    block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    """All inputs: (rows, 128) f32 with rows % block_rows == 0.
+    Returns (m_new, psi_new, phi)."""
+    rows, lane = x.shape
+    assert lane == LANE and rows % block_rows == 0, (x.shape, block_rows)
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    out_sds = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return pl.pallas_call(
+        functools.partial(_edm_kernel, alpha=alpha, beta=beta),
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=[spec] * 3,
+        out_shape=[out_sds] * 3,
+        interpret=interpret,
+    )(x, g, m, psi)
+
+
+def _axpy_kernel(c_ref, l_ref, r_ref, o_ref, *, w0: float, w1: float, w2: float):
+    o_ref[...] = w0 * c_ref[...] + w1 * l_ref[...] + w2 * r_ref[...]
+
+
+def gossip_axpy_flat(center, left, right, *, w0: float, w1: float, w2: float,
+                     block_rows: int = BLOCK_ROWS, interpret: bool = False):
+    """Fused ring combine  w₀·center + w₁·left + w₂·right  over (rows, 128)."""
+    rows, lane = center.shape
+    assert lane == LANE and rows % block_rows == 0
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_axpy_kernel, w0=w0, w1=w1, w2=w2),
+        grid=(rows // block_rows,),
+        in_specs=[spec] * 3,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(center.shape, center.dtype),
+        interpret=interpret,
+    )(center, left, right)

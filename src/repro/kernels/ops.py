@@ -1,0 +1,97 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On a real TPU these run compiled; in this CPU container they execute in
+interpret mode (functionally identical, exercised by the kernel test suite).
+``edm_update_tree`` is the pytree-level entry the EDM optimizer uses when
+``use_fused_kernel=True``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .edm_update import LANE, edm_update_flat, gossip_axpy_flat
+from .flash_attention import flash_attention_kernel_call
+
+__all__ = ["edm_update", "edm_update_tree", "gossip_axpy", "flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pack(leaf, block_rows):
+    """Flatten to (rows, LANE) f32, padded; returns (packed, orig_size, shape, dtype)."""
+    flat = leaf.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    tile = block_rows * LANE
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, LANE), n
+
+
+def _unpack(packed, n, shape, dtype):
+    return packed.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "block_rows",
+                                             "interpret"))
+def edm_update(x, g, m, psi, *, alpha: float, beta: float,
+               block_rows: int = 512, interpret: bool | None = None):
+    """Array-level fused EDM update.  Any shape; returns (m', ψ', φ)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    xp, n = _pack(x, block_rows)
+    gp, _ = _pack(g, block_rows)
+    mp, _ = _pack(m, block_rows)
+    pp, _ = _pack(psi, block_rows)
+    m2, psi2, phi = edm_update_flat(xp, gp, mp, pp, alpha=alpha, beta=beta,
+                                    block_rows=block_rows, interpret=interpret)
+    return (_unpack(m2, n, x.shape, m.dtype),
+            _unpack(psi2, n, x.shape, psi.dtype),
+            _unpack(phi, n, x.shape, x.dtype))
+
+
+def edm_update_tree(params: Any, grads: Any, m: Any, psi: Any, *,
+                    alpha: float, beta: float) -> Tuple[Any, Any, Any]:
+    """Pytree-level fused update: returns (m', φ, ψ') trees (optimizer order)."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(m)
+    flat_s = treedef.flatten_up_to(psi)
+    outs = [edm_update(x, g, mm, ss, alpha=alpha, beta=beta)
+            for x, g, mm, ss in zip(flat_p, flat_g, flat_m, flat_s)]
+    m_new = treedef.unflatten([o[0] for o in outs])
+    psi_new = treedef.unflatten([o[1] for o in outs])
+    phi = treedef.unflatten([o[2] for o in outs])
+    return m_new, phi, psi_new
+
+
+@functools.partial(jax.jit, static_argnames=("w0", "w1", "w2", "interpret"))
+def gossip_axpy(center, left, right, *, w0: float, w1: float, w2: float,
+                interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    cp, n = _pack(center, 512)
+    lp, _ = _pack(left, 512)
+    rp, _ = _pack(right, 512)
+    out = gossip_axpy_flat(cp, lp, rp, w0=w0, w1=w1, w2=w2,
+                           interpret=interpret)
+    return _unpack(out, n, center.shape, center.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",
+                                             "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool | None = None):
+    """Flash GQA attention, (B, H, S, hd) layout."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_kernel_call(q, k, v, causal=causal, window=window,
+                                       blk_q=blk_q, blk_k=blk_k,
+                                       interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import sdpa_ref
+
+__all__ = ["edm_update_ref", "gossip_axpy_ref", "flash_attention_ref"]
+
+
+def edm_update_ref(x, g, m, psi, *, alpha: float, beta: float):
+    """Reference EDM fused-update chain (optimizers.make_edm unfused path)."""
+    m_new = beta * m + (1.0 - beta) * g
+    psi_new = x - alpha * m_new
+    phi = psi_new + x - psi
+    return m_new, psi_new, phi
+
+
+def gossip_axpy_ref(center, left, right, *, w0, w1, w2):
+    return w0 * center + w1 * left + w2 * right
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, Sq, hd); k, v: (B, K, Sk, hd) — delegates to the model-level
+    SDPA oracle (which is itself validated by the serving tests)."""
+    out = sdpa_ref(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                   jnp.moveaxis(v, 1, 2), causal=causal, window=window)
+    return jnp.moveaxis(out, 2, 1)

@@ -1,0 +1,390 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and extract memory / cost / collective analysis.
+
+The two lines above MUST stay the very first statements: jax locks the device
+count on first init, and the dry-run needs 512 placeholder host devices to
+build the 2×16×16 production mesh.  Smoke tests / benches import jax normally
+and see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm_360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--force]
+Outputs one JSON per combo under experiments/dryrun/.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs.base import ModelConfig, RunConfig
+from repro.launch.hlo_analysis import collective_bytes, count_collectives, roofline
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models.api import batch_specs, build_model, input_specs
+from repro.serve.engine import (build_serve_step, serve_cache_specs,
+                                serve_param_specs)
+from repro.train.trainer import (batch_spec_tree, build_train_step, init_state,
+                                 make_topology, state_specs)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def sanitize_specs(mesh, spec_tree, sds_tree):
+    """Drop sharding on dimensions the mesh cannot divide evenly (e.g. a
+    batch of 1 on a 16-way data axis, or 8 kv heads on a 16-way model axis).
+    jit in_shardings require exact divisibility."""
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def size(entry) -> int:
+        if entry is None:
+            return 1
+        if isinstance(entry, tuple):
+            n = 1
+            for e in entry:
+                n *= ax[e]
+            return n
+        return ax[entry]
+
+    def fix(spec, sds):
+        entries = list(spec)
+        shape = sds.shape
+        # PartitionSpec may be shorter than rank
+        for i, e in enumerate(entries):
+            if i >= len(shape) or (e is not None and shape[i] % size(e) != 0):
+                entries[i] = None
+        return P(*entries)
+
+    return jax.tree.map(fix, spec_tree, sds_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _sharding_tree(mesh, spec_tree, sds_tree=None):
+    if sds_tree is not None:
+        spec_tree = sanitize_specs(mesh, spec_tree, sds_tree)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "transcendentals",
+             "utilization operand 0 {}", "optimal_seconds")}
+
+
+def _memory_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def _model_flops_per_device(cfg: ModelConfig, run: RunConfig,
+                            n_devices: int) -> float:
+    n_active = cfg.n_active_params()
+    if run.mode == "train":
+        tokens = run.global_batch * run.seq_len
+        return 6.0 * n_active * tokens / n_devices
+    if run.mode == "prefill":
+        tokens = run.global_batch * run.seq_len
+        return 2.0 * n_active * tokens / n_devices
+    # decode: one token per request
+    return 2.0 * n_active * run.global_batch / n_devices
+
+
+def _needs_fsdp(cfg: ModelConfig, tp: int = 16) -> bool:
+    """Weights-per-chip beyond ~10 GB under pure 16-way TP → add ZeRO-style
+    2-D weight sharding for the serving path."""
+    return cfg.n_params() * 2 / tp > 10e9
+
+
+def _lower(cfg: ModelConfig, run: RunConfig, mesh, multi_pod: bool,
+           fsdp: bool, unroll: bool = False):
+    """Build and lower the right step function for (cfg, run) on mesh."""
+    from repro.models.moe import set_moe_mesh
+    from repro.models import attention as _attn
+    from repro.models import transformer as _tf
+    _tf.set_seq_parallel_mesh(mesh if run.seq_parallel else None)
+    if run.mode == "train" and run.agents == "pod" and cfg.family != "encdec":
+        # per-layer FSDP re-constraint inside the scan body (ZeRO-3 gather)
+        from repro.configs.base import block_period as _bp, layer_kinds as _lk
+        from repro.models.transformer import _layer_specs
+        period = _bp(cfg)
+        specs = []
+        for kind in _lk(cfg)[:period]:
+            sp = _layer_specs(cfg, kind)
+
+            def add_fsdp(spec):
+                entries = list(spec)
+                for i, e in enumerate(entries):
+                    if e is None:
+                        entries[i] = "data"
+                        break
+                return P(*entries)
+
+            specs.append(jax.tree.map(add_fsdp, sp,
+                                      is_leaf=lambda v: isinstance(v, P)))
+        _tf.set_fsdp_constraint(mesh, tuple(specs))
+    else:
+        _tf.set_fsdp_constraint(None, None)
+    if run.moe_impl == "shard_map":
+        set_moe_mesh(mesh, impl="shard_map")
+    else:
+        set_moe_mesh(mesh if run.moe_sharding else None)
+    _attn.set_bf16_path(run.attn_bf16_path)
+    model = build_model(cfg, decode_window=run.decode_window, unroll=unroll)
+
+    if run.mode == "train":
+        if run.agents == "pod":
+            A = 2 if multi_pod else 1
+        else:
+            A = 32 if multi_pod else 16
+        topo = make_topology(run, A, pods=2 if multi_pod else 1)
+        step = build_train_step(model, run, topo)
+        state_sds = jax.eval_shape(
+            lambda: init_state(model, run, A, jax.random.PRNGKey(0)))
+        batch_sds = batch_specs(cfg, run, agent_axis=A)
+        st_sh = _sharding_tree(mesh, state_specs(model, run, multi_pod),
+                               state_sds)
+        b_sh = _sharding_tree(mesh, batch_spec_tree(model, run, multi_pod),
+                              batch_sds)
+        lowered = jax.jit(step, in_shardings=(st_sh, b_sh)).lower(
+            state_sds, batch_sds)
+        return lowered, {"n_agents": A, "lambda": topo.lam()}
+
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_sh = _sharding_tree(
+        mesh, serve_param_specs(model, fsdp=fsdp, multi_pod=multi_pod),
+        params_sds)
+    dp = ("pod", "data") if multi_pod else "data"
+
+    if run.mode == "prefill":
+        batch_sds = batch_specs(cfg, run)
+        b_spec = {"tokens": P(dp, None)}
+        if cfg.family in ("vlm", "encdec"):
+            b_spec["frontend"] = P(dp, None, None)
+        b_sh = _sharding_tree(mesh, b_spec, batch_sds)
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch)
+
+        return jax.jit(prefill_fn, in_shardings=(p_sh, b_sh)).lower(
+            params_sds, batch_sds), {}
+
+    # decode
+    ins = input_specs(cfg, run)
+    c_sh = _sharding_tree(mesh, serve_cache_specs(model, multi_pod),
+                          ins["caches"])
+    t_sh = _sharding_tree(mesh, {"t": P(dp, None)}, {"t": ins["token"]})["t"]
+    pos_sh = NamedSharding(mesh, P())
+    serve_step = build_serve_step(model)
+    return jax.jit(serve_step, in_shardings=(p_sh, c_sh, t_sh, pos_sh)).lower(
+        params_sds, ins["caches"], ins["token"], ins["pos"]), {}
+
+
+def _analyze(compiled):
+    cost = _cost_dict(compiled)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return cost, coll, hlo
+
+
+def lower_combo(arch: str, shape: str, multi_pod: bool,
+                run_overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    from repro.configs.base import block_period
+    cfg = get_config(arch)
+    run = INPUT_SHAPES[shape]
+    if run_overrides:
+        run = dataclasses.replace(run, **run_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.devices.size
+    fsdp = _needs_fsdp(cfg)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": run.mode, "algorithm": run.algorithm,
+        "topology": run.topology, "agents": run.agents,
+        "gossip_dtype": run.gossip_dtype, "fsdp_serving": fsdp,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+    }
+
+    # ---- 1. full-size lower+compile: the lowering proof + memory analysis --
+    t0 = time.time()
+    lowered, extra = _lower(cfg, run, mesh, multi_pod, fsdp)
+    rec.update(extra)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+    rec["memory"] = _memory_dict(compiled)
+    cost_scan, coll_scan, _ = _analyze(compiled)
+    rec["cost_scan_body_once"] = cost_scan
+    rec["collective_counts"] = count_collectives(compiled.as_text())
+
+    # ---- 2. two-point layer extrapolation for honest cost terms -----------
+    # XLA cost_analysis counts a lax.scan body ONCE; every roofline term is
+    # affine in the number of layer blocks, so lower unrolled 1- and 2-block
+    # variants and evaluate the fit at the full depth.
+    period = block_period(cfg)
+    nb_full = cfg.n_layers // period
+
+    def small_cfg(nb):
+        kw = {"n_layers": period * nb}
+        if cfg.family == "encdec":
+            kw["n_enc_layers"] = nb
+        return dataclasses.replace(cfg, **kw)
+
+    cost, coll = {}, {}
+    if nb_full <= 3:
+        # shallow stacks: lower the exact depth unrolled (no fit needed)
+        c1, k1, _ = _analyze(_lower(small_cfg(nb_full), run, mesh, multi_pod,
+                                    fsdp, unroll=True)[0].compile())
+        cost, coll = c1, k1
+    else:
+        # fit at depths 2 and 3 (depth 1 sits in a different GSPMD regime for
+        # FSDP decode programs and breaks affinity); clamp slope/intercept ≥0.
+        c2, k2, _ = _analyze(_lower(small_cfg(2), run, mesh, multi_pod, fsdp,
+                                    unroll=True)[0].compile())
+        c3, k3, _ = _analyze(_lower(small_cfg(3), run, mesh, multi_pod, fsdp,
+                                    unroll=True)[0].compile())
+
+        def fit(d2, d3):
+            out = {}
+            for key in set(d2) | set(d3):
+                v2, v3 = d2.get(key, 0.0), d3.get(key, 0.0)
+                slope = max(0.0, v3 - v2)
+                intercept = max(0.0, v2 - 2 * slope)
+                out[key] = intercept + slope * nb_full
+            return out
+
+        cost, coll = fit(c2, c3), fit(k2, k3)
+
+    rec["cost"] = cost
+    rec["collective_bytes"] = coll
+    rec["roofline"] = roofline(cost, coll, HW,
+                               _model_flops_per_device(cfg, run, n_devices))
+    rec["ok"] = True
+    return rec
+
+
+def _out_path(arch, shape, multi_pod, tag):
+    mesh = "multi" if multi_pod else "single"
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def run_one(arch, shape, multi_pod, force=False, tag="", **overrides):
+    path = _out_path(arch, shape, multi_pod, tag)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    try:
+        rec = lower_combo(arch, shape, multi_pod, overrides or None)
+    except Exception as e:  # a failure here is a bug in the system
+        rec = {"arch": arch, "shape": shape,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "ok": False, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for perf-variant runs")
+    ap.add_argument("--algorithm", default=None)
+    ap.add_argument("--topology", default=None)
+    ap.add_argument("--agents", default=None)
+    ap.add_argument("--gossip-dtype", default=None)
+    ap.add_argument("--moe-sharding", action="store_true")
+    ap.add_argument("--moe-impl", default=None, choices=["gspmd", "shard_map"])
+    ap.add_argument("--remat-policy", default=None, choices=["full", "dots"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--attn-bf16-path", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    for k in ("algorithm", "topology", "agents"):
+        if getattr(args, k):
+            overrides[k] = getattr(args, k)
+    if args.gossip_dtype:
+        overrides["gossip_dtype"] = args.gossip_dtype
+    if args.moe_sharding:
+        overrides["moe_sharding"] = True
+    if args.moe_impl:
+        overrides["moe_impl"] = args.moe_impl
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+    if args.seq_parallel:
+        overrides["seq_parallel"] = True
+    if args.attn_bf16_path:
+        overrides["attn_bf16_path"] = True
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, force=args.force, tag=args.tag,
+                              **overrides)
+                status = "OK " if rec.get("ok") else "FAIL"
+                r = rec.get("roofline", {})
+                print(f"[{status}] {arch:24s} {shape:12s} "
+                      f"{'multi ' if mp else 'single'} "
+                      f"compile={rec.get('compile_s', '-'):>7}s "
+                      f"bottleneck={r.get('bottleneck', '-'):<10} "
+                      f"t=({r.get('t_compute_s', 0):.3e},"
+                      f"{r.get('t_memory_s', 0):.3e},"
+                      f"{r.get('t_collective_s', 0):.3e})s"
+                      + ("" if rec.get("ok") else f"  {rec.get('error')}"),
+                      flush=True)
+                if rec.get("ok"):
+                    mem = rec.get("memory", {})
+                    print("      memory_analysis: " + ", ".join(
+                        f"{k.split('_size')[0]}={v/1e9:.2f}GB"
+                        for k, v in mem.items() if v) or "(n/a)")
+                    print("      cost_analysis:   " + ", ".join(
+                        f"{k}={v:.4g}" for k, v in rec.get("cost", {}).items())
+                        + f" | collective_bytes={rec['collective_bytes'].get('total', 0):.4g}")
+                n_fail += 0 if rec.get("ok") else 1
+    print(f"\ndone; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

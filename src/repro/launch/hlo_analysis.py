@@ -1,0 +1,136 @@
+"""Post-compile HLO analysis: collective-traffic accounting + roofline terms.
+
+``compiled.cost_analysis()`` gives per-device FLOPs and HBM bytes, but NOT
+collective bytes — we parse the optimized HLO text and sum the data moved by
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, normalized to *bytes crossing links per device*:
+
+    all-gather       : out_bytes · (g-1)/g        (received shards)
+    reduce-scatter   : in_bytes  · (g-1)/g  ≈ out_bytes · (g-1)
+    all-reduce       : 2 · bytes · (g-1)/g        (RS + AG ring)
+    all-to-all       : bytes · (g-1)/g
+    collective-permute: bytes                     (one neighbor hop)
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+__all__ = ["collective_bytes", "roofline", "count_collectives"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of possibly-tuple shape string like
+    '(f32[16,8]{1,0}, bf16[4]{0})' or 'bf16[128,512]{1,0}'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [n_groups, group_size]
+        return max(1, int(m.group(2)))
+    return 2
+
+
+def _iter_ops(hlo_text: str):
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},]+)\s+([\w\-]+)",
+                     ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        # strip -start/-done variants (async collectives)
+        base = op
+        for suf in ("-start", "-done"):
+            if base.endswith(suf):
+                base = base[: -len(suf)]
+        yield base, shape_str, ls
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    seen_done = set()
+    for op, _, line in _iter_ops(hlo_text):
+        if op in _COLLECTIVES and not line.split("=")[1].strip().startswith("("):
+            pass
+        if op in _COLLECTIVES:
+            if "-done" in line.split("=", 1)[1][:60]:
+                continue
+            counts[op] = counts.get(op, 0) + 1
+    return counts
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved per collective type (see module docstring)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for op, shape_str, line in _iter_ops(hlo_text):
+        if op not in _COLLECTIVES:
+            continue
+        # async pairs: count the -start (has the real shape), skip -done
+        if re.match(r"%?[\w.\-]+\s*=\s*[\w\[\]{},()]+\s+[\w\-]+-done", line):
+            continue
+        if "-done" in line and f"{op}-done" in line:
+            continue
+        b = _shape_bytes(shape_str)
+        g = _group_size(line)
+        eff = (g - 1) / g
+        if op == "all-gather":
+            out[op] += b * eff
+        elif op == "reduce-scatter":
+            out[op] += b * (g - 1)
+        elif op == "all-reduce":
+            out[op] += 2 * b * eff
+        elif op == "all-to-all":
+            out[op] += b * eff
+        else:  # collective-permute
+            out[op] += b
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline(cost: Dict[str, float], coll: Dict[str, float], hw: Dict[str, float],
+             model_flops_per_device: float) -> Dict[str, float]:
+    """Three roofline terms in seconds (per device; the SPMD module is the
+    per-device program)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / hw["peak_flops_bf16"]
+    t_memory = bytes_hbm / hw["hbm_bw"]
+    t_coll = coll["total"] / hw["ici_bw"]
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    return {
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_hbm,
+        "collective_bytes": coll["total"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom[1],
+        "model_flops": model_flops_per_device,
+        "useful_flop_frac": (model_flops_per_device / flops) if flops else 0.0,
+    }

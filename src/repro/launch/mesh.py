@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Functions, not module-level constants, so importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Target hardware: TPU v5e pods — 256 chips/pod (16×16), 2 pods = 512 chips.
+Mesh axes:
+  pod   — crosses DCI (slow inter-pod links); EDM's gossip edge in "pod" mode
+  data  — data parallel / decentralized agents; ICI
+  model — tensor/expert parallel inside one agent; ICI
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_sim_mesh", "HW"]
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+    "hbm_bytes": 16e9,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_sim_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

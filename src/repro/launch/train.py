@@ -1,0 +1,84 @@
+"""Training launcher.
+
+On real hardware this runs the decentralized EDM trainer on the production
+mesh; on this CPU container it runs the same program on a 1×1 mesh with the
+agent axis unsharded (reduced configs), which is how the examples and tests
+exercise it.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm_360m --smoke \
+      --steps 20 --agents 4 --algorithm edm
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import RunConfig
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train import build_train_step, checkpoint, init_state, make_topology
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--per-agent-batch", type=int, default=1)
+    ap.add_argument("--algorithm", default="edm")
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--alpha", type=float, default=0.2)
+    ap.add_argument("--beta", type=float, default=0.9)
+    ap.add_argument("--phi", type=float, default=0.2,
+                    help="Dirichlet heterogeneity of the token streams")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    run = RunConfig(global_batch=args.agents * args.per_agent_batch,
+                    seq_len=args.seq, algorithm=args.algorithm,
+                    alpha=args.alpha, beta=args.beta, topology=args.topology,
+                    remat=False)
+    topo = make_topology(run, args.agents)
+    print(f"arch={cfg.name} ({cfg.n_params()/1e6:.1f}M params) "
+          f"agents={args.agents} topo={args.topology} λ={topo.lam():.4f} "
+          f"alg={args.algorithm}")
+
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       n_agents=args.agents, phi=args.phi)
+
+    def sample(key):
+        b = data.sample(key, args.per_agent_batch)
+        if cfg.family in ("vlm", "encdec"):
+            import jax.numpy as jnp
+            b["frontend"] = jax.random.normal(
+                jax.random.fold_in(key, 1),
+                (args.agents, args.per_agent_batch, cfg.n_frontend_tokens,
+                 cfg.d_model), dtype=jnp.dtype(cfg.dtype))
+        return b
+
+    state = init_state(model, run, args.agents, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model, run, topo))
+    key = jax.random.PRNGKey(1)
+    t0 = time.time()
+    for t in range(args.steps):
+        key, kd = jax.random.split(key)
+        state, m = step(state, sample(kd))
+        if t % 5 == 0 or t == args.steps - 1:
+            print(f"step {t:4d} loss={float(m['loss']):.4f} "
+                  f"consensus={float(m['consensus']):.2e} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state["params"])
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro.models — composable model definitions for the assigned architectures."""
+from .api import Model, build_model, input_specs, batch_specs  # noqa: F401

@@ -1,0 +1,183 @@
+"""GQA attention: full-causal, sliding-window, cross, and cached decode.
+
+The jnp path here is the reference used for training/dry-run lowering; the
+Pallas flash kernel (repro.kernels.flash_attention) is the TPU hot path and is
+validated against :func:`sdpa_ref` in tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm, rope
+
+__all__ = ["init_attn", "apply_attn", "init_kv_cache", "sdpa_ref"]
+
+NEG_INF = -1e30
+
+# §Perf lever: keep the attention *data path* (logits → probs → out) in bf16
+# — mirrors the Pallas flash kernel, whose f32 accumulators live in VMEM while
+# HBM-crossing tensors stay bf16.  Halves the activation-cotangent collective
+# payloads that otherwise ride the f32 jnp reference path.
+_BF16_PATH = {"on": False}
+
+
+def set_bf16_path(flag: bool) -> None:
+    _BF16_PATH["on"] = bool(flag)
+
+
+def init_attn(key, cfg, cross: bool = False) -> Dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "ln": jnp.zeros((d,), dt),
+        "wq": dense_init(ks[0], (d, H * hd), 0, dt),
+        "wk": dense_init(ks[1], (d, K * hd), 0, dt),
+        "wv": dense_init(ks[2], (d, K * hd), 0, dt),
+        "wo": dense_init(ks[3], (H * hd, d), 0, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def sdpa_ref(q, k, v, *, causal: bool, window: int = 0,
+             q_offset: int = 0, kv_len: Optional[jax.Array] = None):
+    """Scaled dot-product attention with GQA head sharing.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, K, hd).  H % K == 0.
+    ``q_offset``: absolute position of q[0] (for cached decode).
+    ``kv_len``:   optional dynamic number of valid kv entries (decode).
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    bf16_path = _BF16_PATH["on"] and q.dtype == jnp.bfloat16
+    acc_dt = q.dtype if bf16_path else jnp.float32
+    qf = q.astype(acc_dt).reshape(B, Sq, K, G, hd)
+    kf = k.astype(acc_dt)
+    vf = v.astype(acc_dt)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qf * scale, kf,
+                        preferred_element_type=jnp.float32)  # (B,K,G,Sq,Sk)
+    Sk = k.shape[1]
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        mask &= k_pos[None, :] < kv_len
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(acc_dt)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vf)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _qkv(p, cfg, x, positions):
+    use_rope = getattr(cfg, "pos_emb", "rope") == "rope"
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def init_kv_cache(cfg, batch: int, length: int, dtype=None):
+    K, hd = cfg.n_kv_heads, cfg.hd
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, length, K, hd), dt),
+        "v": jnp.zeros((batch, length, K, hd), dt),
+    }
+
+
+def apply_attn(p, cfg, x, positions, *, mode: str = "train",
+               cache: Optional[Dict] = None, window: int = 0,
+               cur_len: Optional[jax.Array] = None,
+               xattn_kv: Optional[Tuple] = None) -> Tuple:
+    """Attention sub-block with pre-norm + residual.
+
+    mode:
+      "train"   — full (or sliding-window) causal self-attention.
+      "prefill" — as train, but also fills and returns the cache.
+      "decode"  — single-step (Sq=1) with ring-buffer/linear cache update.
+      "cross"   — encoder-decoder cross attention (xattn_kv = (k, v)).
+    Returns (y, new_cache).
+    """
+    resid = x
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    win = window or cfg.sliding_window
+
+    if mode == "cross":
+        B, S, d = h.shape
+        H, hd = cfg.n_heads, cfg.hd
+        q = (h @ p["wq"]).reshape(B, S, H, hd)
+        k, v = xattn_kv
+        out = sdpa_ref(q, k, v, causal=False)
+        y = out.reshape(B, S, H * hd) @ p["wo"]
+        return resid + y, cache
+
+    if mode in ("train", "prefill"):
+        q, k, v = _qkv(p, cfg, h, positions)
+        out = sdpa_ref(q, k, v, causal=True, window=win)
+        new_cache = None
+        if mode == "prefill":
+            if win and k.shape[1] > win:
+                # keep the last `win` entries, rolled so that ring-buffer slot
+                # of position p is p % win (decode-compatible layout).
+                S = k.shape[1]
+                k_w, v_w = k[:, -win:], v[:, -win:]
+                shift = (S - win) % win
+                new_cache = {"k": jnp.roll(k_w, shift, axis=1),
+                             "v": jnp.roll(v_w, shift, axis=1)}
+            else:
+                new_cache = {"k": k, "v": v}
+        B, S = h.shape[:2]
+        y = out.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+        return resid + y, new_cache
+
+    assert mode == "decode" and cache is not None
+    # one new token; positions: (B, 1) absolute position of the new token
+    q, k_new, v_new = _qkv(p, cfg, h, positions)
+    L = cache["k"].shape[1]
+    if win and L == win:
+        # ring buffer: slot = pos mod window
+        slot = positions[0, 0] % win
+    else:
+        slot = cur_len if cur_len is not None else positions[0, 0]
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    if win and L == win:
+        # every occupied slot is within the window → plain full attention over
+        # the ring buffer (positions beyond cur fill are zero-keyed but masked
+        # by kv_len when the buffer is not yet full).
+        n_valid = jnp.minimum(positions[0, 0] + 1, win)
+        out = sdpa_ref(q, k, v, causal=False, kv_len=n_valid)
+    else:
+        out = sdpa_ref(q, k, v, causal=False, kv_len=positions[0, 0] + 1)
+    B = h.shape[0]
+    y = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return resid + y, {"k": k, "v": v}

@@ -1,0 +1,202 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the brief, the mel-spectrogram + conv feature extractor is a STUB:
+``input_specs`` supplies precomputed frame embeddings (B, T_enc, d_model).
+The encoder is bidirectional self-attention; the decoder is causal
+self-attention + cross-attention.  Positional information is sinusoidal
+(computed on the fly — adaptation from Whisper's learned 448-entry table so
+the assigned 32k/500k decode shapes lower mechanically; recorded in DESIGN).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .attention import apply_attn, init_attn, init_kv_cache, sdpa_ref
+from .layers import apply_dense_ffn, dense_init, init_dense_ffn, rms_norm
+from .transformer import _attn_specs, _ffn_specs, _prepend
+
+__all__ = [
+    "init_encdec", "encdec_loss", "encdec_prefill", "encdec_decode_step",
+    "init_encdec_cache", "encdec_param_specs", "encdec_cache_specs",
+    "N_AUDIO_FRAMES",
+]
+
+N_AUDIO_FRAMES = 1500  # whisper 30 s @ 50 Hz after conv frontend
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_layer(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"attn": init_attn(k1, cfg),
+            "ffn": init_dense_ffn(k2, cfg.d_model, cfg.d_ff, cfg.mlp_gated,
+                                  jnp.dtype(cfg.dtype))}
+
+
+def _init_dec_layer(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"attn": init_attn(k1, cfg),
+            "xattn": init_attn(k2, cfg),
+            "ffn": init_dense_ffn(k3, cfg.d_model, cfg.d_ff, cfg.mlp_gated,
+                                  jnp.dtype(cfg.dtype))}
+
+
+def init_encdec(cfg: ModelConfig, key) -> Dict:
+    ks = jax.random.split(key, 4)
+    ekeys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dkeys = jax.random.split(ks[1], cfg.n_layers)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "enc_blocks": jax.vmap(functools.partial(_init_enc_layer, cfg))(ekeys),
+        "enc_ln": jnp.zeros((cfg.d_model,), dt),
+        "dec_embed": dense_init(ks[2], (cfg.vocab_size, cfg.d_model), 1, dt),
+        "dec_blocks": jax.vmap(functools.partial(_init_dec_layer, cfg))(dkeys),
+        "dec_ln": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": dense_init(ks[3], (cfg.d_model, cfg.vocab_size), 0, dt),
+    }
+
+
+def encdec_param_specs(cfg: ModelConfig) -> Dict:
+    enc = {"attn": _attn_specs(cfg), "ffn": _ffn_specs(cfg, cfg.mlp_gated)}
+    dec = {"attn": _attn_specs(cfg), "xattn": _attn_specs(cfg),
+           "ffn": _ffn_specs(cfg, cfg.mlp_gated)}
+    lift = lambda t: jax.tree.map(lambda s: _prepend(s, None), t,
+                                  is_leaf=lambda s: isinstance(s, P))
+    return {
+        "enc_blocks": lift(enc), "enc_ln": P(None),
+        "dec_embed": P("model", None),
+        "dec_blocks": lift(dec), "dec_ln": P(None),
+        "lm_head": P(None, "model"),
+    }
+
+
+def _encode(cfg, params, frames, unroll=False):
+    """frames: (B, T_enc, d) stub embeddings → encoder output."""
+    B, T, d = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x = frames + _sinusoid(pos, d).astype(frames.dtype)
+
+    # encoder needs non-causal attention; specialised body:
+    def enc_body(x, p):
+        resid = x
+        h = rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
+        from .attention import _qkv
+        q, k, v = _qkv(p["attn"], cfg, h, pos)
+        out = sdpa_ref(q, k, v, causal=False)
+        y = out.reshape(B, T, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
+        x = resid + y
+        x = apply_dense_ffn(p["ffn"], x, cfg.norm_eps)
+        return x, None
+
+    x, _ = jax.lax.scan(enc_body, x, params["enc_blocks"], unroll=unroll)
+    return rms_norm(x, params["enc_ln"], cfg.norm_eps)
+
+
+def _cross_kv(cfg, p_x, enc_out):
+    B, T, _ = enc_out.shape
+    K, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p_x["wk"]).reshape(B, T, K, hd)
+    v = (enc_out @ p_x["wv"]).reshape(B, T, K, hd)
+    return k, v
+
+
+def _decode_stack(cfg, params, x, positions, enc_out, *, mode, caches=None,
+                  window=0, unroll=False):
+    B = x.shape[0]
+
+    def body(carry, xs):
+        x = carry
+        p, cache = xs
+        self_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+        x, new_self = apply_attn(p["attn"], cfg, x, positions, mode=mode,
+                                 cache=self_cache, window=window)
+        if mode == "decode":
+            xk, xv = cache["xk"], cache["xv"]
+        else:
+            xk, xv = _cross_kv(cfg, p["xattn"], enc_out)
+        x, _ = apply_attn(p["xattn"], cfg, x, positions, mode="cross",
+                          xattn_kv=(xk, xv))
+        x = apply_dense_ffn(p["ffn"], x, cfg.norm_eps)
+        if new_self is None:
+            out = 0.0
+        else:
+            out = {"k": new_self["k"], "v": new_self["v"], "xk": xk, "xv": xv}
+        return x, out
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches),
+                                 unroll=unroll)
+    return x, new_caches
+
+
+def encdec_loss(cfg: ModelConfig, params, batch, *, remat=True,
+                unroll=False) -> jax.Array:
+    frames, tokens = batch["frontend"], batch["tokens"]
+    enc_out = _encode(cfg, params, frames, unroll=unroll)
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = jnp.take(params["dec_embed"], tokens, axis=0)
+    x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    x, _ = _decode_stack(cfg, params, x, pos, enc_out, mode="train",
+                         unroll=unroll)
+    logits = (rms_norm(x, params["dec_ln"], cfg.norm_eps)
+              @ params["lm_head"]).astype(jnp.float32)
+    pred, tgt = logits[:, :-1], tokens[:, 1:]
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, length: int,
+                      n_frames: int = N_AUDIO_FRAMES):
+    L = cfg.n_layers
+    kv = init_kv_cache(cfg, batch, length)
+    dt = jnp.dtype(cfg.dtype)
+    one = {
+        "k": kv["k"], "v": kv["v"],
+        "xk": jnp.zeros((batch, n_frames, cfg.n_kv_heads, cfg.hd), dt),
+        "xv": jnp.zeros((batch, n_frames, cfg.n_kv_heads, cfg.hd), dt),
+    }
+    return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (L,) + l.shape), one)
+
+
+def encdec_cache_specs(cfg: ModelConfig):
+    kv = P(None, "data", None, "model", None)
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv}
+
+
+def encdec_prefill(cfg: ModelConfig, params, tokens, frames, window: int = 0,
+                   unroll=False):
+    enc_out = _encode(cfg, params, frames, unroll=unroll)
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = jnp.take(params["dec_embed"], tokens, axis=0)
+    x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    x, caches = _decode_stack(cfg, params, x, pos, enc_out, mode="prefill",
+                              window=window, unroll=unroll)
+    logits = rms_norm(x[:, -1:], params["dec_ln"], cfg.norm_eps) @ params["lm_head"]
+    return logits, caches
+
+
+def encdec_decode_step(cfg: ModelConfig, params, caches, token, pos, *,
+                       window: int = 0, unroll=False):
+    B = token.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    x = jnp.take(params["dec_embed"], token, axis=0)
+    x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+    x, new_caches = _decode_stack(cfg, params, x, positions, None,
+                                  mode="decode", caches=caches, window=window,
+                                  unroll=unroll)
+    logits = rms_norm(x, params["dec_ln"], cfg.norm_eps) @ params["lm_head"]
+    return logits, new_caches

@@ -1,0 +1,347 @@
+"""Unified decoder LM covering dense / MoE / SSM / hybrid / VLM families.
+
+Layers are grouped into **period blocks** (configs.base.block_period): all
+layers at the same position-within-period share a stacked parameter tree of
+leading dim ``n_blocks`` and the stack is driven by ``jax.lax.scan`` — this
+keeps the HLO size O(period) instead of O(n_layers), which is what makes the
+94-layer MoE dry-run compile in seconds.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, block_period, layer_kinds
+from .attention import apply_attn, init_attn, init_kv_cache
+from .layers import apply_dense_ffn, dense_init, init_dense_ffn, rms_norm
+from .mamba import apply_mamba, init_mamba, init_ssm_cache
+from .moe import apply_moe, init_moe
+
+__all__ = [
+    "init_lm", "lm_loss", "lm_prefill", "lm_decode_step", "init_lm_cache",
+    "lm_param_specs", "lm_cache_specs", "set_seq_parallel_mesh",
+]
+
+# §Perf lever (Megatron-style sequence parallelism): constrain the residual
+# stream between layers to be sequence-sharded over 'model', turning each TP
+# all-reduce (2× payload) into reduce-scatter + all-gather (1× payload).
+_SEQ_PAR = {"mesh": None}
+
+
+def set_seq_parallel_mesh(mesh) -> None:
+    _SEQ_PAR["mesh"] = mesh
+
+
+# §Perf lever (ZeRO-3 / agents="pod" mode): re-constrain each layer's weight
+# slice to its FSDP sharding INSIDE the scan body, so XLA all-gathers one
+# layer at a time instead of materializing the whole unsharded stack.
+_FSDP = {"mesh": None, "specs": None}
+
+
+def set_fsdp_constraint(mesh, specs) -> None:
+    _FSDP["mesh"] = mesh
+    _FSDP["specs"] = specs
+
+
+def _fsdp_constrain(tree, pi):
+    mesh = _FSDP["mesh"]
+    if mesh is None:
+        return tree
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda x, sp: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, sp)),
+        tree, _FSDP["specs"][pi], is_leaf=lambda v: isinstance(v, P))
+
+
+def _seq_constrain(x):
+    mesh = _SEQ_PAR["mesh"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(None, "model", None)))
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply / spec
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, kind, key) -> Dict:
+    mixer, ffn = kind
+    k1, k2 = jax.random.split(key)
+    p = {}
+    if mixer == "attn":
+        p["attn"] = init_attn(k1, cfg)
+    else:
+        p["ssm"] = init_mamba(k1, cfg)
+    if ffn == "dense":
+        ff = cfg.dense_d_ff or cfg.d_ff
+        p["ffn"] = init_dense_ffn(k2, cfg.d_model, ff, cfg.mlp_gated,
+                                  jnp.dtype(cfg.dtype))
+    elif ffn == "moe":
+        p["moe"] = init_moe(k2, cfg)
+    return p
+
+
+def _apply_layer(cfg, kind, p, x, positions, *, mode, cache, window, aux):
+    mixer, ffn = kind
+    new_cache = None
+    if mixer == "attn":
+        x, new_cache = apply_attn(p["attn"], cfg, x, positions, mode=mode,
+                                  cache=cache, window=window)
+    else:
+        m_mode = "decode" if mode == "decode" else "train"
+        x, new_cache = apply_mamba(p["ssm"], cfg, x, mode=m_mode, cache=cache)
+    if ffn == "dense":
+        x = apply_dense_ffn(p["ffn"], x, cfg.norm_eps)
+    elif ffn == "moe":
+        x, a = apply_moe(p["moe"], cfg, x, cfg.norm_eps)
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def _attn_specs(cfg) -> Dict:
+    sp = {
+        "ln": P(None),
+        "wq": P(None, "model"), "wk": P(None, "model"), "wv": P(None, "model"),
+        "wo": P("model", None),
+    }
+    if cfg.qkv_bias:
+        sp.update({"bq": P("model"), "bk": P("model"), "bv": P("model")})
+    if cfg.qk_norm:
+        sp.update({"q_norm": P(None), "k_norm": P(None)})
+    return sp
+
+
+def _ssm_specs(cfg) -> Dict:
+    return {
+        "ln": P(None),
+        "in_proj": P(None, "model"),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "x_proj": P("model", None),
+        "dt_proj": P(None, "model"), "dt_bias": P("model"),
+        "A_log": P("model", None), "D": P("model"),
+        "out_proj": P("model", None),
+    }
+
+
+def _ffn_specs(cfg, gated) -> Dict:
+    sp = {"ln": P(None), "w_up": P(None, "model"), "w_down": P("model", None)}
+    if gated:
+        sp["w_gate"] = P(None, "model")
+    return sp
+
+
+def _moe_specs(cfg) -> Dict:
+    sp = {
+        "ln": P(None),
+        "router": P(None, None),
+        # expert parallelism: experts sharded over the 'model' axis
+        "w_gate": P("model", None, None),
+        "w_up": P("model", None, None),
+        "w_down": P("model", None, None),
+    }
+    if cfg.n_shared_experts:
+        sp["shared"] = _ffn_specs(cfg, True)
+        del sp["shared"]["ln"]
+    return sp
+
+
+def _layer_specs(cfg, kind) -> Dict:
+    mixer, ffn = kind
+    sp = {}
+    if mixer == "attn":
+        sp["attn"] = _attn_specs(cfg)
+    else:
+        sp["ssm"] = _ssm_specs(cfg)
+    if ffn == "dense":
+        sp["ffn"] = _ffn_specs(cfg, cfg.mlp_gated)
+    elif ffn == "moe":
+        sp["moe"] = _moe_specs(cfg)
+    return sp
+
+
+def _prepend(spec: P, axis) -> P:
+    return P(axis, *tuple(spec))
+
+
+# ---------------------------------------------------------------------------
+# model init / specs
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg: ModelConfig, key) -> Dict:
+    period = block_period(cfg)
+    kinds = layer_kinds(cfg)[:period]
+    n_blocks = cfg.n_layers // period
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, period + 3)
+    blocks = []
+    for pi, kind in enumerate(kinds):
+        bkeys = jax.random.split(keys[pi], n_blocks)
+        blocks.append(jax.vmap(functools.partial(_init_layer, cfg, kind))(bkeys))
+    return {
+        "embed": dense_init(keys[-3], (cfg.vocab_size, cfg.d_model), 1, dt),
+        "blocks": tuple(blocks),
+        "final_ln": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), 0, dt),
+    }
+
+
+def lm_param_specs(cfg: ModelConfig) -> Dict:
+    period = block_period(cfg)
+    kinds = layer_kinds(cfg)[:period]
+    blocks = []
+    for kind in kinds:
+        sp = _layer_specs(cfg, kind)
+        blocks.append(jax.tree.map(
+            lambda s: _prepend(s, None), sp,
+            is_leaf=lambda s: isinstance(s, P)))
+    return {
+        "embed": P("model", None),
+        "blocks": tuple(blocks),
+        "final_ln": P(None),
+        "lm_head": P(None, "model"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, tokens, frontend_embeds):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _stack_scan(cfg, params, x, positions, *, mode, caches=None, window=0,
+                remat=True, unroll=False, remat_policy="full"):
+    """Scan the period-block stack.  Returns (x, new_caches, aux)."""
+    period = block_period(cfg)
+    kinds = layer_kinds(cfg)[:period]
+
+    def body(carry, xs):
+        x, aux = carry
+        block_params, block_caches = xs
+        new_caches = []
+        for pi, kind in enumerate(kinds):
+            c = None if block_caches is None else block_caches[pi]
+            x = _seq_constrain(x)
+            bp = _fsdp_constrain(block_params[pi], pi)
+            x, nc, aux = _apply_layer(cfg, kind, bp, x, positions,
+                                      mode=mode, cache=c, window=window, aux=aux)
+            new_caches.append(nc if nc is not None else 0.0)
+        return (x, aux), tuple(new_caches)
+
+    if remat and mode == "train":
+        if remat_policy == "dots":
+            # save matmul (incl. TP-all-reduced) outputs; recompute only
+            # elementwise ops — no collective recompute in backward (§Perf)
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_saveable)
+        else:
+            body = jax.checkpoint(body)
+
+    xs = (params["blocks"], caches)
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs, unroll=unroll)
+    return x, new_caches, aux
+
+
+def _logits(cfg, params, x):
+    h = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return h @ params["lm_head"]
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, remat=True,
+            unroll=False, remat_policy="full") -> jax.Array:
+    """Next-token cross entropy.  batch: {tokens (B,S) int32,
+    [frontend (B,P,d)]}; loss predicts tokens[1:] from prefix."""
+    tokens = batch["tokens"]
+    fe = batch.get("frontend")
+    x = _embed_inputs(cfg, params, tokens, fe)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _, aux = _stack_scan(cfg, params, x, positions, mode="train",
+                            remat=remat, unroll=unroll,
+                            remat_policy=remat_policy)
+    logits = _logits(cfg, params, x).astype(jnp.float32)
+    # predict token t+1 at position t; frontend positions predict nothing.
+    n_front = 0 if fe is None else fe.shape[1]
+    pred = logits[:, n_front:-1]                       # (B, St-1, V)
+    tgt = tokens[:, 1:]
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, length: int):
+    """Cache pytree matching the block structure: tuple over period positions
+    of stacked (n_blocks, ...) leaves."""
+    period = block_period(cfg)
+    kinds = layer_kinds(cfg)[:period]
+    n_blocks = cfg.n_layers // period
+    caches = []
+    for mixer, _ in kinds:
+        if mixer == "attn":
+            one = init_kv_cache(cfg, batch, length)
+        else:
+            one = init_ssm_cache(cfg, batch)
+        caches.append(jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_blocks,) + l.shape), one))
+    return tuple(caches)
+
+
+def lm_cache_specs(cfg: ModelConfig) -> Tuple:
+    period = block_period(cfg)
+    kinds = layer_kinds(cfg)[:period]
+    specs = []
+    for mixer, _ in kinds:
+        if mixer == "attn":
+            # (n_blocks, B, S, K, hd): batch over 'data', kv heads over 'model'
+            one = {"k": P(None, "data", None, "model", None),
+                   "v": P(None, "data", None, "model", None)}
+        else:
+            one = {"h": P(None, "data", "model", None),
+                   "conv": P(None, "data", None, "model")}
+        specs.append(one)
+    return tuple(specs)
+
+
+def lm_prefill(cfg: ModelConfig, params, tokens, frontend_embeds=None,
+               window: int = 0, unroll=False):
+    """Full-sequence forward returning (last-token logits, kv caches)."""
+    x = _embed_inputs(cfg, params, tokens, frontend_embeds)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    period = block_period(cfg)
+    kinds = layer_kinds(cfg)[:period]
+    n_blocks = cfg.n_layers // period
+    # prefill needs per-layer caches as scan *outputs*; mamba still needs a
+    # zero initial state, so pass explicit empty caches where required.
+    caches = init_lm_cache(cfg, B, S if not window else window)
+    x, new_caches, _ = _stack_scan(cfg, params, x, positions, mode="prefill",
+                                   caches=caches, window=window, remat=False,
+                                   unroll=unroll)
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits, new_caches
+
+
+def lm_decode_step(cfg: ModelConfig, params, caches, token, pos, *,
+                   window: int = 0, unroll=False):
+    """One decode step.  token: (B, 1) int32; pos: scalar int32 (uniform
+    across the batch).  Returns (logits (B,1,V), new caches)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    B = token.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    x, new_caches, _ = _stack_scan(cfg, params, x, positions, mode="decode",
+                                   caches=caches, window=window, remat=False,
+                                   unroll=unroll)
+    return _logits(cfg, params, x), new_caches

@@ -1,0 +1,4 @@
+"""repro.optim — step-size schedules for the decentralized trainer."""
+from .schedules import (  # noqa: F401
+    constant, cosine, linear_warmup, scale_grads, warmup_cosine,
+)

@@ -1,0 +1,57 @@
+"""Step-size schedules for decentralized training.
+
+The paper's theory uses a constant α = O(1-λ); production training needs
+warmup + decay.  Schedules compose with any registered algorithm through
+``scale_by_schedule`` — the optimizer is built with α=1 and the per-step
+scale multiplies the *gradient* before the update, which for every algorithm
+in repro.core.optimizers is equivalent to scaling α (they are all linear in
+the gradient path) while keeping the bias-correction recursion intact.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "cosine", "linear_warmup", "warmup_cosine",
+           "scale_grads"]
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> multiplier
+
+
+def constant(value: float = 1.0) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup(warmup_steps: int, base: float = 1.0) -> Schedule:
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return base * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+    return f
+
+
+def cosine(total_steps: int, base: float = 1.0, floor: float = 0.1) -> Schedule:
+    def f(step):
+        s = jnp.clip(jnp.asarray(step, jnp.float32), 0, total_steps)
+        cos = 0.5 * (1.0 + jnp.cos(math.pi * s / max(total_steps, 1)))
+        return base * (floor + (1.0 - floor) * cos)
+    return f
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, base: float = 1.0,
+                  floor: float = 0.1) -> Schedule:
+    w = linear_warmup(warmup_steps, base)
+    c = cosine(total_steps, base, floor)
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return jnp.where(s < warmup_steps, w(step), c(step))
+    return f
+
+
+def scale_grads(grads, step, schedule: Schedule):
+    """Multiply every gradient leaf by schedule(step)."""
+    import jax
+    m = schedule(step)
+    return jax.tree.map(lambda g: (m * g.astype(jnp.float32)).astype(g.dtype),
+                        grads)

@@ -1,0 +1,5 @@
+"""repro.serve — inference substrate (KV caches, decode loop)."""
+from .engine import (  # noqa: F401
+    build_prefill, build_serve_step, greedy_generate, scale_specs_multipod,
+    serve_cache_specs, serve_param_specs,
+)

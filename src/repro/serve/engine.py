@@ -1,0 +1,109 @@
+"""Serving substrate: prefill + batched greedy decode with KV / SSM caches.
+
+Decentralized training is a train-time technique; serving uses a single
+replica sharded TP (+ ZeRO-style 2-D weight sharding for models that exceed
+one chip-row's HBM).  ``build_serve_step`` is what the decode dry-run shapes
+(decode_32k, long_500k) lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.api import Model, build_model
+from repro.train.trainer import prepend_agent_axis
+
+__all__ = [
+    "build_serve_step", "build_prefill", "serve_param_specs",
+    "serve_cache_specs", "scale_specs_multipod", "greedy_generate",
+]
+
+
+def build_serve_step(model: Model):
+    """serve_step(params, caches, token, pos) -> (next_token, new_caches).
+
+    One new token per request against a seq_len-deep cache (greedy head)."""
+
+    def serve_step(params, caches, token, pos):
+        logits, new_caches = model.decode_step(params, caches, token, pos)
+        next_token = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_token.astype(jnp.int32)[:, None], new_caches
+
+    return serve_step
+
+
+def build_prefill(model: Model):
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+    return prefill
+
+
+def serve_param_specs(model: Model, *, fsdp: bool, multi_pod: bool):
+    """TP specs; with fsdp=True the first unsharded dim of each ≥2-D weight is
+    additionally sharded over ('data',) (ZeRO-3-style, weights gathered on
+    use) — required for jamba-398b-class models at 16 GB/chip."""
+    base = model.param_specs()
+    axis = ("pod", "data") if multi_pod else "data"
+
+    def lift(s: P) -> P:
+        if not fsdp:
+            return s
+        entries = list(s)
+        if sum(e is not None for e in entries) >= len(entries):
+            return s
+        for i, e in enumerate(entries):
+            if e is None:
+                entries[i] = axis
+                break
+        return P(*entries)
+
+    return jax.tree.map(lift, base, is_leaf=lambda s: isinstance(s, P))
+
+
+def serve_cache_specs(model: Model, multi_pod: bool):
+    specs = model.cache_specs()
+    if multi_pod:
+        specs = scale_specs_multipod(specs)
+    return specs
+
+
+def scale_specs_multipod(spec_tree):
+    """Map every 'data' mesh-axis reference to ('pod','data')."""
+
+    def f(s: P) -> P:
+        return P(*(("pod", "data") if e == "data" else e for e in s))
+
+    return jax.tree.map(f, spec_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def greedy_generate(model: Model, params, batch: Dict[str, Any],
+                    n_steps: int) -> jax.Array:
+    """End-to-end: prefill the prompt, then greedy-decode n_steps tokens.
+    Returns (B, n_steps) generated ids.  CPU-scale usage (examples/tests)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    n_front = model.cfg.n_frontend_tokens if model.cfg.family == "vlm" else 0
+    logits, caches = model.prefill(params, batch)
+
+    # grow self-attention caches to S + n_steps
+    L0 = S + n_front
+
+    def grow(path, c):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name in ("k", "v") and c.ndim >= 4 and c.shape[-3] == L0:
+            pad = jnp.zeros(c.shape[:-3] + (n_steps,) + c.shape[-2:], c.dtype)
+            return jnp.concatenate([c, pad], axis=-3)
+        return c
+
+    caches = jax.tree_util.tree_map_with_path(grow, caches)
+    step = build_serve_step(model)
+    tok = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(n_steps - 1):
+        tok, caches = step(params, caches, tok, jnp.asarray(L0 + i, jnp.int32))
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

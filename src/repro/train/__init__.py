@@ -1,0 +1,6 @@
+"""repro.train — decentralized training loop substrate."""
+from .trainer import (  # noqa: F401
+    TrainState, batch_spec_tree, build_train_step, init_state, make_topology,
+    prepend_agent_axis, state_specs,
+)
+from . import checkpoint  # noqa: F401

@@ -1,0 +1,42 @@
+"""Minimal dependency-free checkpointing: pytree ↔ .npz with path keys."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "load"]
+
+_SEP = "|"
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(path: str, tree: Any) -> None:
+    arrays, _ = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (dtypes/shapes validated)."""
+    data = np.load(path)
+    arrays, treedef = _flatten(like)
+    restored = {}
+    for key, ref in arrays.items():
+        got = data[key]
+        assert got.shape == ref.shape, (key, got.shape, ref.shape)
+        restored[key] = got
+    leaves = [restored[k] for k in arrays.keys()]
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

@@ -1,0 +1,193 @@
+"""Decentralized trainer: EDM (or any registered algorithm) over a model.
+
+The train state carries the full per-agent replica set:
+    params : every leaf (A, *shape)   — A = number of agents
+    opt    : algorithm state (same leading axis)
+    step   : scalar
+
+``build_train_step`` returns a pure function suitable for jax.jit with
+explicit in/out shardings (see :func:`state_specs`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import Topology, make_mixer, make_optimizer
+from repro.core.metrics import consensus_distance
+from repro.models.api import Model
+
+__all__ = [
+    "TrainState", "build_train_step", "init_state", "state_specs",
+    "make_topology", "prepend_agent_axis", "batch_spec_tree",
+]
+
+
+TrainState = Dict[str, Any]  # {"params", "opt", "step"}
+
+
+def make_topology(run: RunConfig, n_agents: int, pods: int = 1) -> Topology:
+    from repro.core import exp_graph, fully_connected, hierarchical, ring, torus2d
+    if run.topology == "ring":
+        return ring(n_agents)
+    if run.topology == "exp":
+        return exp_graph(n_agents)
+    if run.topology == "full":
+        return fully_connected(n_agents)
+    if run.topology == "torus":
+        return torus2d(pods if pods > 1 else 1, n_agents // max(pods, 1))
+    if run.topology == "hier":
+        assert pods >= 1
+        return hierarchical(pods, n_agents // pods)
+    raise ValueError(run.topology)
+
+
+def _cast_mixer(mix, dtype: Optional[str]):
+    """Optionally gossip in a lower-precision payload (§Perf lever)."""
+    if not dtype or dtype == "float32":
+        return mix
+
+    def mixed(tree):
+        dt = jnp.dtype(dtype)
+        low = jax.tree.map(lambda x: x.astype(dt), tree)
+        out = mix(low)
+        return jax.tree.map(lambda o, x: o.astype(x.dtype), out, tree)
+
+    return mixed
+
+
+def build_train_step(model: Model, run: RunConfig, topo: Topology,
+                     use_fused_kernel: bool = False) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves: (A, per_agent_batch, ...).
+    """
+    mix = _cast_mixer(make_mixer(topo), run.gossip_dtype)
+    kw = dict(use_fused_kernel=use_fused_kernel) if run.algorithm == "edm" else {}
+    opt = make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta,
+                         mix=mix, **kw)
+
+    def agent_loss(params, batch):
+        kw = {}
+        if model.cfg.family != "encdec":
+            kw["remat_policy"] = run.remat_policy
+        return model.loss(params, batch, remat=run.remat, **kw)
+
+    grad_fn = jax.vmap(jax.value_and_grad(agent_loss))
+
+    schedule = None
+    if run.warmup_steps or run.total_steps:
+        from repro.optim import warmup_cosine
+        schedule = warmup_cosine(run.warmup_steps or 1,
+                                 run.total_steps or 10**9)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        losses, grads = grad_fn(state["params"], batch)
+        if schedule is not None:
+            from repro.optim import scale_grads
+            grads = scale_grads(grads, state["step"], schedule)
+        new_params, new_opt = opt.step(state["params"], grads, state["opt"])
+        if run.gossip_every > 1:
+            # local-EDM: amortize gossip over k steps — on skip steps apply the
+            # same update with the identity mixer (W = I).
+            local_opt = make_optimizer(run.algorithm, alpha=run.alpha,
+                                       beta=run.beta, mix=lambda t: t)
+            lp, lo = local_opt.step(state["params"], grads, state["opt"])
+            do_gossip = (state["step"] % run.gossip_every) == run.gossip_every - 1
+            new_params = jax.tree.map(
+                lambda a, b: jnp.where(do_gossip, a, b), new_params, lp)
+            new_opt = jax.tree.map(
+                lambda a, b: jnp.where(do_gossip, a, b), new_opt, lo)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "consensus": consensus_distance(new_params),
+            "grad_norm": jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))),
+        }
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def init_state(model: Model, run: RunConfig, n_agents: int, key) -> TrainState:
+    """All agents start from the same x(0) (paper's initialization)."""
+    params1 = model.init(key)
+    params = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (n_agents,) + l.shape), params1)
+    mix = make_mixer(make_topology(run, n_agents))
+    opt = make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta, mix=mix)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+def prepend_agent_axis(spec: P, agent_axis, fsdp_axis: Optional[str] = None) -> P:
+    """(A, *shape) leaf spec: agent axis over `agent_axis`; optionally shard
+    the first unsharded WEIGHT dim over `fsdp_axis` (agents="pod" mode).
+
+    Stacked block leaves carry a leading layer-stack dim (spec entry 0 is
+    None); FSDP must land on a weight dim, so skip entry 0 in that case —
+    sharding the stack dim would be layer parallelism, and a 9-deep stack on
+    a 16-way axis just gets sanitized away (weights silently replicated)."""
+    entries = list(spec)
+    if fsdp_axis is not None:
+        start = 1 if (len(entries) > 1 and entries[0] is None) else 0
+        for i in range(start, len(entries)):
+            if entries[i] is None:
+                entries[i] = fsdp_axis
+                break
+    return P(agent_axis, *entries)
+
+
+def state_specs(model: Model, run: RunConfig, multi_pod: bool) -> Dict[str, Any]:
+    """PartitionSpecs for the TrainState under the chosen agent granularity."""
+    base = model.param_specs()
+
+    if run.agents == "data":
+        agent_axis = ("pod", "data") if multi_pod else "data"
+        fsdp = None
+    elif run.agents == "pod":
+        agent_axis = "pod" if multi_pod else None
+        fsdp = "data"
+    else:
+        raise ValueError(run.agents)
+
+    lift = lambda s: prepend_agent_axis(s, agent_axis, fsdp)
+    pspecs = jax.tree.map(lift, base, is_leaf=lambda s: isinstance(s, P))
+
+    opt_specs: Dict[str, Any] = {}
+    # every optimizer state pytree mirrors the params tree
+    n_slots = {"edm": ("m", "psi"), "edm_ef": ("m", "psi", "e"),
+               "ed": ("m", "psi"), "dsgd": (),
+               "dmsgd": ("m",), "dsgt": ("y", "g_prev"),
+               "dsgt_hb": ("y", "g_prev", "m"), "decentlam": ("m",),
+               "qg": ("m",)}[run.algorithm]
+    for slot in n_slots:
+        opt_specs[slot] = pspecs
+    return {"params": pspecs, "opt": opt_specs, "step": P()}
+
+
+def batch_spec_tree(model: Model, run: RunConfig, multi_pod: bool):
+    """Specs for the (A, b, ...) training batch."""
+    if run.agents == "data":
+        agent_axis = ("pod", "data") if multi_pod else "data"
+        inner = None
+    else:
+        agent_axis = "pod" if multi_pod else None
+        inner = "data"
+    cfg = model.cfg
+    specs = {"tokens": P(agent_axis, inner, None)}
+    if cfg.family in ("vlm", "encdec"):
+        specs["frontend"] = P(agent_axis, inner, None, None)
+    return specs

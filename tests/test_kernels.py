@@ -1,0 +1,163 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+with shape/dtype sweeps and hypothesis property tests."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.edm_update import edm_update_flat, gossip_axpy_flat
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# edm_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(512, 128), (1024, 128), (4096, 128)])
+@pytest.mark.parametrize("alpha,beta", [(0.1, 0.9), (0.01, 0.0), (1e-3, 0.99)])
+def test_edm_update_flat_matches_ref(shape, alpha, beta):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x, g, m, psi = (jax.random.normal(k, shape, jnp.float32) for k in ks)
+    m2, psi2, phi = edm_update_flat(x, g, m, psi, alpha=alpha, beta=beta,
+                                    block_rows=512, interpret=True)
+    rm, rp, rphi = ref.edm_update_ref(x, g, m, psi, alpha=alpha, beta=beta)
+    np.testing.assert_allclose(m2, rm, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(psi2, rp, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(phi, rphi, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(7,), (130,), (3, 5, 17), (1000, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_edm_update_arbitrary_shapes_dtypes(shape, dtype):
+    """ops.edm_update pads/packs any shape and returns original layout."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x, g, m, psi = (jax.random.normal(k, shape).astype(dtype) for k in ks)
+    m2, psi2, phi = ops.edm_update(x, g, m, psi, alpha=0.05, beta=0.9,
+                                   interpret=True)
+    rm, rp, rphi = ref.edm_update_ref(
+        x.astype(jnp.float32), g.astype(jnp.float32),
+        m.astype(jnp.float32), psi.astype(jnp.float32), alpha=0.05, beta=0.9)
+    assert m2.shape == shape and m2.dtype == dtype
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(phi, np.float32), rphi,
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(m2, np.float32), rm,
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 8), alpha=st.floats(1e-4, 1.0),
+       beta=st.floats(0.0, 0.999), seed=st.integers(0, 2**31 - 1))
+def test_edm_update_property(rows, alpha, beta, seed):
+    """Property: kernel == oracle for random shapes/hparams; and β=0 reduces
+    to plain ED (m' = g)."""
+    shape = (rows * 512, 128)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x, g, m, psi = (jax.random.normal(k, shape, jnp.float32) for k in ks)
+    m2, psi2, phi = edm_update_flat(x, g, m, psi, alpha=alpha, beta=beta,
+                                    interpret=True)
+    rm, rp, rphi = ref.edm_update_ref(x, g, m, psi, alpha=alpha, beta=beta)
+    np.testing.assert_allclose(phi, rphi, rtol=2e-5, atol=2e-5)
+    if beta == 0.0:
+        np.testing.assert_allclose(m2, g, rtol=1e-6)
+
+
+def test_edm_kernel_inside_optimizer():
+    """make_edm(use_fused_kernel=True) must be step-for-step identical to the
+    unfused optimizer."""
+    from repro.core import make_mixer, ring
+    from repro.core.optimizers import make_edm
+    topo = ring(4)
+    mix = make_mixer(topo)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 33, 5)),
+              "b": jax.random.normal(jax.random.PRNGKey(1), (4, 7))}
+    grads = jax.tree.map(lambda x: 0.1 * x, params)
+    o1 = make_edm(0.05, 0.9, mix, use_fused_kernel=False)
+    o2 = make_edm(0.05, 0.9, mix, use_fused_kernel=True)
+    s1, s2 = o1.init(params), o2.init(params)
+    p1, p2 = params, params
+    for _ in range(3):
+        p1, s1 = o1.step(p1, grads, s1)
+        p2, s2 = o2.step(p2, grads, s2)
+    for k in params:
+        np.testing.assert_allclose(p1[k], p2[k], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gossip_axpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(512, 128), (2048, 128)])
+def test_gossip_axpy_matches_ref(shape):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    c, l, r = (jax.random.normal(k, shape, jnp.float32) for k in ks)
+    out = gossip_axpy_flat(c, l, r, w0=0.5, w1=0.25, w2=0.25, interpret=True)
+    np.testing.assert_allclose(
+        out, ref.gossip_axpy_ref(c, l, r, w0=0.5, w1=0.25, w2=0.25),
+        rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, H, K, Sq, Sk, hd, causal, window)
+    (1, 4, 4, 256, 256, 64, True, 0),      # MHA causal
+    (2, 8, 2, 256, 256, 64, True, 0),      # GQA 4:1
+    (1, 4, 1, 128, 384, 64, False, 0),     # MQA non-causal, Sq != Sk
+    (1, 2, 2, 512, 512, 128, True, 256),   # sliding window
+    (1, 15, 5, 128, 128, 64, True, 0),     # smollm-style 15:5 heads
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES,
+                         ids=[f"c{i}" for i in range(len(ATTN_CASES))])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, H, K, Sq, Sk, hd, causal, window = case
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, K, Sk, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, K, Sk, hd)).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              blk_q=128, blk_k=128, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 2), g=st.integers(1, 3), nq=st.integers(1, 3),
+       nk=st.integers(1, 3), causal=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+def test_flash_attention_property(b, g, nq, nk, causal, seed):
+    """Random GQA geometry sweep vs oracle (block-multiple shapes)."""
+    if causal and nk < nq:
+        nk = nq  # causal needs kv to at least cover q
+    H, K = 2 * g, 2
+    Sq, Sk, hd = 128 * nq, 128 * nk, 64
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, H, Sq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, K, Sk, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, K, Sk, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_window_equals_full_when_window_ge_seq():
+    q = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(5), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(6), (1, 2, 256, 64))
+    full = ops.flash_attention(q, k, v, causal=True, window=0, interpret=True)
+    win = ops.flash_attention(q, k, v, causal=True, window=4096, interpret=True)
+    np.testing.assert_allclose(full, win, rtol=1e-6, atol=1e-6)

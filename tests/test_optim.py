@@ -1,0 +1,51 @@
+"""LR-schedule substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import constant, cosine, linear_warmup, scale_grads, warmup_cosine
+
+
+def test_warmup_ramps_then_cosine_decays():
+    sch = warmup_cosine(10, 100)
+    vals = [float(sch(jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert vals[0] < 0.2                        # warmup start
+    assert abs(vals[1] - 1.0) < 0.05            # warmup end ≈ base
+    assert vals[-1] == pytest.approx(0.1, abs=1e-5)  # cosine floor
+    assert all(a >= b - 1e-6 for a, b in zip(vals[1:], vals[2:]))  # decay
+
+
+def test_constant_and_warmup():
+    assert float(constant(0.5)(jnp.asarray(123))) == 0.5
+    w = linear_warmup(4)
+    np.testing.assert_allclose(
+        [float(w(jnp.asarray(s))) for s in range(5)],
+        [0.25, 0.5, 0.75, 1.0, 1.0])
+
+
+def test_scale_grads_tree():
+    g = {"a": jnp.ones((2, 3)), "b": jnp.full((4,), 2.0, jnp.bfloat16)}
+    out = scale_grads(g, jnp.asarray(0), cosine(10, base=2.0, floor=0.0))
+    np.testing.assert_allclose(np.asarray(out["a"], np.float32), 2.0)
+    assert out["b"].dtype == jnp.bfloat16
+
+
+def test_trainer_with_schedule_runs():
+    from repro.configs.base import ModelConfig, RunConfig
+    from repro.data import SyntheticLM
+    from repro.models import build_model
+    from repro.train import build_train_step, init_state, make_topology
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                      dtype="float32")
+    model = build_model(cfg)
+    run = RunConfig(global_batch=4, seq_len=8, algorithm="edm", alpha=0.1,
+                    beta=0.9, remat=False, warmup_steps=2, total_steps=10)
+    topo = make_topology(run, 4)
+    state = init_state(model, run, 4, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model, run, topo))
+    data = SyntheticLM(vocab_size=128, seq_len=8, n_agents=4)
+    for t in range(3):
+        state, m = step(state, data.sample(jax.random.PRNGKey(t), 1))
+    assert jnp.isfinite(m["loss"])

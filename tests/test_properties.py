@@ -1,0 +1,194 @@
+"""Property-based (hypothesis) tests on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core import exp_graph, hierarchical, make_mixer, ring, torus2d
+from repro.core.mixing import mix_dense, mix_shifts
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# gossip invariants
+# ---------------------------------------------------------------------------
+
+def _topo_strategy(draw):
+    kind = draw(st.sampled_from(["ring", "exp", "torus", "hier"]))
+    if kind == "ring":
+        return ring(draw(st.sampled_from([2, 3, 8, 17, 32])))
+    if kind == "exp":
+        return exp_graph(draw(st.sampled_from([4, 8, 16, 32])))
+    if kind == "torus":
+        p = draw(st.sampled_from([2, 4]))
+        d = draw(st.sampled_from([4, 8]))
+        return torus2d(p, d)
+    p = draw(st.sampled_from([2, 4]))
+    d = draw(st.sampled_from([4, 8]))
+    return hierarchical(p, d, c=draw(st.sampled_from([0.3, 0.5, 0.8])))
+
+
+topos = st.composite(_topo_strategy)()
+
+
+@settings(max_examples=25, deadline=None)
+@given(topo=topos, seed=st.integers(0, 2**31 - 1))
+def test_gossip_preserves_mean_and_contracts(topo, seed):
+    """For any shipped topology: (1) W is doubly stochastic → mean preserved;
+    (2) consensus distance never increases (contraction of P_I W)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (topo.n_agents, 6))
+    mixed = mix_shifts(topo, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(mixed, 0)),
+                               np.asarray(jnp.mean(x, 0)), rtol=2e-5,
+                               atol=1e-5)
+    def cons(z):
+        return float(jnp.sum((z - jnp.mean(z, 0, keepdims=True)) ** 2))
+    assert cons(mixed) <= cons(x) * (1 + 1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(topo=topos, seed=st.integers(0, 2**31 - 1))
+def test_shift_engine_equals_dense_engine(topo, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (topo.n_agents, 3, 4))
+    np.testing.assert_allclose(np.asarray(mix_shifts(topo, x)),
+                               np.asarray(mix_dense(topo, x)),
+                               rtol=3e-5, atol=3e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), steps=st.integers(3, 12),
+       beta=st.sampled_from([0.0, 0.5, 0.9]), seed=st.integers(0, 2**31 - 1))
+def test_edm_mean_invariant_property(n, steps, beta, seed):
+    """x̄(t+1) = x̄(t) − α m̄(t) for arbitrary gradient streams — the paper's
+    §3.2 identity, which must hold exactly for ANY gossip matrix."""
+    from repro.core import make_optimizer
+    topo = ring(n)
+    mix = make_mixer(topo)
+    alpha = 0.07
+    opt = make_optimizer("edm", alpha=alpha, beta=beta, mix=mix)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, 5))
+    state = opt.init(x)
+    m_bar = jnp.zeros(5)
+    x_bar = jnp.mean(x, 0)
+    for t in range(steps):
+        key, kg = jax.random.split(key)
+        g = jax.random.normal(kg, (n, 5))
+        m_bar = beta * m_bar + (1 - beta) * jnp.mean(g, 0)
+        x_bar = x_bar - alpha * m_bar
+        x, state = opt.step(x, g, state)
+        np.testing.assert_allclose(np.asarray(jnp.mean(x, 0)),
+                                   np.asarray(x_bar), rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch == dense per-token oracle (when capacity is sufficient)
+# ---------------------------------------------------------------------------
+
+def _moe_dense_oracle(p, cfg, x, eps):
+    """Compute every expert for every token, combine by router weights."""
+    from repro.models.layers import rms_norm, swiglu
+    from repro.models.moe import _route
+    B, S, d = x.shape
+    h = rms_norm(x, p["ln"], eps)
+    flat = h.reshape(-1, d)
+    w, idx, aux = _route(flat @ p["router"].astype(flat.dtype),
+                         cfg.experts_per_token)
+    g = jax.nn.silu(jnp.einsum("td,edf->tef", flat, p["w_gate"]))
+    u = jnp.einsum("td,edf->tef", flat, p["w_up"])
+    all_out = jnp.einsum("tef,efd->ted", g * u, p["w_down"])  # (T, E, d)
+    sel = jnp.take_along_axis(all_out, idx[..., None], axis=1)  # (T, k, d)
+    comb = jnp.sum(sel * w[..., None].astype(sel.dtype), axis=1)
+    y = comb.reshape(B, S, d)
+    if "shared" in p:
+        sp = p["shared"]
+        y = y + swiglu(h, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return x + y
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_exp=st.sampled_from([4, 8]),
+       k=st.sampled_from([1, 2]), shared=st.booleans())
+def test_moe_dispatch_equals_dense_oracle(seed, n_exp, k, shared):
+    from repro.models.moe import apply_moe, init_moe
+    cfg = ModelConfig(name="m", family="moe", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=48, vocab_size=64,
+                      n_experts=n_exp, experts_per_token=k,
+                      n_shared_experts=1 if shared else 0,
+                      capacity_factor=float(n_exp), dtype="float32")
+    p = init_moe(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 8, 32))
+    got, aux = apply_moe(p, cfg, x, 1e-6)
+    want = _moe_dense_oracle(p, cfg, x, 1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+    assert jnp.isfinite(aux)
+
+
+# ---------------------------------------------------------------------------
+# Mamba chunked scan == sequential oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), S=st.sampled_from([8, 16, 64]),
+       chunk=st.sampled_from([4, 8, 16]))
+def test_chunked_scan_equals_sequential(seed, S, chunk):
+    from repro.models.mamba import _chunked_scan, ssm_scan_ref
+    B, di, s = 2, 6, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.uniform(ks[0], (B, S, di, s), minval=0.3, maxval=0.99)
+    b = jax.random.normal(ks[1], (B, S, di, s))
+    h0 = jax.random.normal(ks[2], (B, di, s))
+    hs_c, hT_c = _chunked_scan(a, b, h0, chunk)
+    hs_r, hT_r = ssm_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(hs_c), np.asarray(hs_r),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hT_c), np.asarray(hT_r),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_mamba_train_decode_agree():
+    """Running the block step-by-step in decode mode reproduces the train-mode
+    (chunked-scan) outputs — the SSM serving path is the same function."""
+    from repro.models.mamba import apply_mamba, init_mamba, init_ssm_cache
+    cfg = ModelConfig(name="m", family="ssm", n_layers=1, d_model=32,
+                      ssm_state=4, ssm_conv=4, ssm_expand=2, ssm_dt_rank=8,
+                      vocab_size=64, dtype="float32")
+    p = init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 32))
+    y_train, _ = apply_mamba(p, cfg, x, mode="train", chunk=5)
+    cache = init_ssm_cache(cfg, 2)
+    outs = []
+    for t in range(10):
+        y_t, cache = apply_mamba(p, cfg, x[:, t:t + 1], mode="decode",
+                                 cache=cache)
+        outs.append(y_t)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
+                               rtol=5e-4, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# config system invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(
+    ["pixtral_12b", "qwen3_moe_235b_a22b", "falcon_mamba_7b", "qwen1_5_110b",
+     "whisper_small", "smollm_360m", "starcoder2_7b", "jamba_1_5_large_398b",
+     "deepseek_moe_16b", "qwen3_14b"]))
+def test_layer_kinds_consistent_with_period(arch):
+    from repro.configs import get_config
+    from repro.configs.base import block_period, layer_kinds
+    cfg = get_config(arch)
+    kinds = layer_kinds(cfg)
+    p = block_period(cfg)
+    assert cfg.n_layers % p == 0
+    for i, kd in enumerate(kinds):
+        assert kd == kinds[i % p]
+    assert cfg.n_active_params() <= cfg.n_params()

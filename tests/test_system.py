@@ -1,0 +1,172 @@
+"""End-to-end system tests: decentralized trainer, serving engine,
+checkpointing, sharding-spec coherence, and HLO analysis utilities."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.serve import build_serve_step, greedy_generate
+from repro.train import (build_train_step, checkpoint, init_state,
+                         make_topology, state_specs)
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=512,
+                   dtype="float32")
+
+
+def _run_cfg(**kw):
+    base = dict(global_batch=8, seq_len=16, algorithm="edm", alpha=2e-2,
+                beta=0.9, topology="ring", remat=False)
+    base.update(kw)
+    return RunConfig(**base)
+
+
+@pytest.mark.parametrize("algorithm", ["edm", "ed", "dsgd", "dmsgd", "dsgt",
+                                       "dsgt_hb", "decentlam", "qg"])
+def test_decentralized_train_step_all_algorithms(algorithm):
+    """One jitted decentralized train step per algorithm: finite metrics,
+    params updated, consensus stays bounded."""
+    run = _run_cfg(algorithm=algorithm)
+    model = build_model(TINY)
+    A = 4
+    topo = make_topology(run, A)
+    state = init_state(model, run, A, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model, run, topo))
+    data = SyntheticLM(vocab_size=TINY.vocab_size, seq_len=run.seq_len,
+                       n_agents=A, phi=0.5)
+    batch = data.sample(jax.random.PRNGKey(1), run.global_batch // A)
+    state2, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["consensus"])
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         state["params"], state2["params"])
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+def test_training_reduces_loss_multi_step():
+    """30 EDM steps on heterogeneous synthetic LM data reduce the loss."""
+    run = _run_cfg(alpha=0.3, seq_len=32)
+    model = build_model(TINY)
+    A = 4
+    topo = make_topology(run, A)
+    state = init_state(model, run, A, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model, run, topo))
+    data = SyntheticLM(vocab_size=TINY.vocab_size, seq_len=run.seq_len,
+                       n_agents=A, phi=0.2)
+    key = jax.random.PRNGKey(2)
+    losses = []
+    for t in range(30):
+        key, kd = jax.random.split(key)
+        state, m = step(state, data.sample(kd, 2))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+def test_edm_consensus_contracts_vs_dsgd():
+    """Bias correction: under heterogeneous data the EDM consensus distance
+    stays of the same order as DSGD's while the mean loss tracks lower/equal
+    (sanity of the integrated trainer, not a theorem check)."""
+    model = build_model(TINY)
+    A = 4
+    data = SyntheticLM(vocab_size=TINY.vocab_size, seq_len=16, n_agents=A,
+                       phi=0.1)
+    finals = {}
+    for alg in ("edm", "dsgd"):
+        run = _run_cfg(algorithm=alg, alpha=5e-2)
+        topo = make_topology(run, A)
+        state = init_state(model, run, A, jax.random.PRNGKey(0))
+        step = jax.jit(build_train_step(model, run, topo))
+        key = jax.random.PRNGKey(3)
+        for _ in range(15):
+            key, kd = jax.random.split(key)
+            state, m = step(state, data.sample(kd, 2))
+        finals[alg] = float(m["loss"])
+    assert finals["edm"] <= finals["dsgd"] + 0.5, finals
+
+
+def test_greedy_generate_shapes_and_determinism():
+    cfg = get_smoke_config("smollm_360m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                          cfg.vocab_size)}
+    out1 = greedy_generate(model, params, batch, n_steps=5)
+    out2 = greedy_generate(model, params, batch, n_steps=5)
+    assert out1.shape == (2, 5)
+    np.testing.assert_array_equal(out1, out2)
+    assert jnp.all((out1 >= 0) & (out1 < cfg.vocab_size))
+
+
+def test_sliding_window_decode_matches_full_within_window():
+    """With window W ≥ context length, windowed decode == full decode."""
+    cfg = dataclasses.replace(TINY, n_layers=2)
+    S = 12
+    m_full = build_model(cfg)
+    m_win = build_model(cfg, decode_window=16)  # ring cache 16 > S
+    params = m_full.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    lf, _ = m_full.prefill(params, {"tokens": toks})
+    lw, _ = m_win.prefill(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lw), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)},
+            "d": [jnp.zeros(2), jnp.full((1, 1), 7.0)]}
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, tree)
+    back = checkpoint.load(path, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_state_specs_match_state_structure():
+    """Sharding-spec trees must be congruent with the actual state pytrees
+    for every algorithm (the dry-run relies on this)."""
+    model = build_model(TINY)
+    for alg in ("edm", "dsgd", "dmsgd", "dsgt", "dsgt_hb", "decentlam", "qg"):
+        run = _run_cfg(algorithm=alg)
+        state = jax.eval_shape(
+            lambda: init_state(model, run, 4, jax.random.PRNGKey(0)))
+        specs = state_specs(model, run, multi_pod=False)
+        # tree.map raises on structure mismatch
+        jax.tree.map(lambda sds, sp: None, state, specs,
+                     is_leaf=lambda x: isinstance(x, P))
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_analysis import collective_bytes, count_collectives
+    hlo = """
+  %ag = f32[16,128]{1,0} all-gather(f32[1,128]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar = bf16[256]{0} all-reduce(bf16[256]{0} %y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = f32[64]{0} collective-permute(f32[64]{0} %z), source_target_pairs={{0,1},{1,0}}
+"""
+    c = collective_bytes(hlo)
+    assert c["all-gather"] == pytest.approx(16 * 128 * 4 * 15 / 16)
+    assert c["all-reduce"] == pytest.approx(2 * 256 * 2 * 3 / 4)
+    assert c["collective-permute"] == pytest.approx(64 * 4)
+    counts = count_collectives(hlo)
+    assert counts == {"all-gather": 1, "all-reduce": 1,
+                      "collective-permute": 1}
+
+
+def test_gossip_lowers_to_collective_permute():
+    """The production claim: ring gossip on a sharded agent axis compiles to
+    collective-permute ops, NOT all-reduce/all-gather."""
+    from repro.core import make_mixer, ring
+    devs = jax.devices()
+    if len(devs) < 2:
+        # single CPU device: verify on an unsharded axis that rolls appear
+        mix = make_mixer(ring(4))
+        hlo = jax.jit(mix).lower(jnp.zeros((4, 8))).as_text()
+        assert "slice" in hlo or "concatenate" in hlo  # roll lowering
+        return
