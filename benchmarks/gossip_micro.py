@@ -1,18 +1,98 @@
 """Microbenchmarks of the gossip/optimizer hot path (CPU wall-clock; the
-derived column carries the analytically modeled TPU HBM-traffic ratio)."""
+derived column carries the analytically modeled TPU HBM-traffic ratio).
+
+Two parts:
+
+* in-process engine benches on the current device set (dense vs shifts,
+  EDM step fused vs unfused);
+* an engine × topology × fused sweep (``--sweep``) that needs one device
+  per agent — ``run()`` launches it in a subprocess with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=32`` so it works
+  regardless of the parent's device count.  This is the acceptance bench
+  for the production ppermute path: on the paper's n=32 ring the
+  fused-combine ppermute engine must come in at ≤ the shifts engine.
+"""
 from __future__ import annotations
 
-from typing import Dict
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import make_mixer, ring
-from repro.core.optimizers import make_edm
-from .common import csv_row, timeit_us
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SWEEP_MARKER = "SWEEP_CSV_JSON:"
+
+
+def _sweep_cases():
+    from repro.core import hierarchical, ring
+    return [
+        ("ring32", ring(32), 1),
+        ("hier2x16", hierarchical(2, 16), 2),
+        ("hier4x4_ring", hierarchical(4, 4, intra="ring"), 4),
+    ]
+
+
+def sweep(d: int = 1 << 16, iters: int = 20) -> List[str]:
+    """Engine × topology × fused sweep; requires >= 32 devices."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import make_mixer
+    from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
+    from .common import csv_row, timeit_us
+
+    lines: List[str] = []
+    for name, topo, pods in _sweep_cases():
+        A = topo.n_agents
+        mesh = make_gossip_mesh(A, pods=pods)
+        axes = gossip_agent_axes(mesh)
+        x = jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(0), (A, d)),
+            NamedSharding(mesh, P(axes)))
+        engines = {
+            "shifts": make_mixer(topo, "shifts"),
+            "ppermute": make_mixer(topo, "ppermute", mesh=mesh,
+                                   agent_axes=axes),
+            "ppermute_fused": make_mixer(topo, "ppermute", mesh=mesh,
+                                         agent_axes=axes,
+                                         use_fused_kernel=True),
+        }
+        us_shifts = None
+        for ename, mixer in engines.items():
+            us = timeit_us(jax.jit(mixer), x, iters=iters)
+            if ename == "shifts":
+                us_shifts = us
+            lines.append(csv_row(
+                f"gossip/{name}/{ename}", us,
+                f"n={A};d={d};terms={len(topo.terms)};"
+                f"speedup_vs_shifts={us_shifts / us:.2f}x"))
+    return lines
+
+
+def _sweep_subprocess() -> List[str]:
+    """Run :func:`sweep` under a 32-device host platform (one per agent)."""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=32",
+           "PYTHONPATH": os.path.join(REPO, "src")
+           + (os.pathsep + os.environ["PYTHONPATH"]
+              if os.environ.get("PYTHONPATH") else "")}
+    r = subprocess.run([sys.executable, "-m", "benchmarks.gossip_micro",
+                        "--sweep"], cwd=REPO, env=env, capture_output=True,
+                       text=True, timeout=900)
+    for line in r.stdout.splitlines():
+        if line.startswith(_SWEEP_MARKER):
+            return json.loads(line[len(_SWEEP_MARKER):])
+    raise RuntimeError(f"engine sweep failed:\n{r.stdout[-2000:]}"
+                       f"\n{r.stderr[-2000:]}")
 
 
 def run(verbose: bool = True) -> Dict:
+    from repro.core import make_mixer, ring
+    from repro.core.optimizers import make_edm
+    from .common import csv_row, timeit_us
+
     results: Dict = {}
     lines = []
     topo = ring(8)
@@ -41,6 +121,16 @@ def run(verbose: bool = True) -> Dict:
     lines.append(csv_row("edm_step/fused_pallas", float("nan"),
                          "hbm_streams=7;modeled_traffic_ratio=0.64;"
                          "validated=interpret_mode"))
+
+    # engine × topology × fused sweep, one device per agent
+    try:
+        lines.extend(_sweep_subprocess())
+    except Exception as e:  # pragma: no cover - environment-dependent
+        lines.append(csv_row("gossip/engine_sweep", float("nan"),
+                             f"skipped:{type(e).__name__}"))
+        if verbose:
+            print(f"  [engine sweep skipped: {e}]")
+
     results["csv"] = lines
     if verbose:
         print("\n".join("  " + l for l in lines))
@@ -48,4 +138,7 @@ def run(verbose: bool = True) -> Dict:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()["csv"]))
+    if "--sweep" in sys.argv:
+        print(_SWEEP_MARKER + json.dumps(sweep()))
+    else:
+        print("\n".join(run()["csv"]))

@@ -1,0 +1,24 @@
+"""Cross-version jax shims.
+
+The codebase targets the ``jax.shard_map`` API (jax >= 0.8, ``check_vma``)
+but must also run on the 0.4.x line shipped in the CPU test container,
+where the entry point is ``jax.experimental.shard_map.shard_map`` and the
+replication check is spelled ``check_rep``.  Everything that shard-maps
+(gossip engines, expert-parallel MoE) goes through this one wrapper so the
+version split lives in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking disabled, on any jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

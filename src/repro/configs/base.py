@@ -164,6 +164,7 @@ class RunConfig:
     beta: float = 0.9
     topology: str = "ring"           # ring | exp | torus | full | hier
     agents: str = "data"             # data | pod  (DESIGN §3)
+    gossip_engine: str = "shifts"    # dense | shifts | ppermute  (DESIGN §3)
     gossip_dtype: str = "float32"    # bf16 payload is a §Perf lever
     gossip_every: int = 1            # gossip every k steps (local-EDM, §Perf)
     moe_sharding: bool = False       # explicit MoE dispatch constraints (§Perf)

@@ -3,6 +3,6 @@ from .topology import (  # noqa: F401
     Topology, ShiftTerm, ring, exp_graph, torus2d, fully_connected,
     hierarchical, disconnected, spectral_stats,
 )
-from .mixing import mix_dense, mix_shifts, make_mixer  # noqa: F401
+from .mixing import mix_dense, mix_shifts, mix_ppermute, make_mixer  # noqa: F401
 from .optimizers import DecOptimizer, make_optimizer, ALGORITHMS  # noqa: F401
 from . import metrics  # noqa: F401

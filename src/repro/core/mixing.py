@@ -1,23 +1,32 @@
 """Mixing engines: apply W to a pytree with a leading agent axis.
 
-Two interchangeable engines (tests assert they agree to float tolerance):
+Three interchangeable engines (tests assert they agree to float tolerance):
 
-* :func:`mix_dense`  — explicit ``einsum('ij,j...->i...', W, x)``.  Used for
+* :func:`mix_dense`    — explicit ``einsum('ij,j...->i...', W, x)``.  Used for
   paper-scale simulation and as the oracle.
-* :func:`mix_shifts` — weighted sum of ``jnp.roll`` terms.  On a sharded agent
-  axis XLA lowers every roll to a ``collective-permute`` — this is the
-  production gossip path (DESIGN §3).
+* :func:`mix_shifts`   — weighted sum of ``jnp.roll`` terms.  On a sharded
+  agent axis XLA lowers every roll to a ``collective-permute``, but the
+  schedule is GSPMD's to choose.
+* :func:`mix_ppermute` — the production gossip path (DESIGN §3):
+  ``shard_map`` + one explicit ``jax.lax.ppermute`` per gossip term, with the
+  weighted accumulation optionally fused into a single n-ary Pallas combine
+  (:func:`repro.kernels.ops.gossip_axpy`).  Hierarchical topologies decompose
+  per term onto the matching mesh sub-axis, so intra-pod permutes never leave
+  the pod's ICI domain.
 
-Both operate leaf-wise on arbitrary pytrees whose leaves have leading dim
-``A = n_agents``.
+All engines operate leaf-wise on arbitrary pytrees whose leaves have leading
+dim ``A = n_agents``.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 
 from .topology import Topology
 
@@ -42,10 +51,7 @@ def mix_dense(topo: Topology, tree: Any) -> Any:
 def _mix_leaf_shifts(topo: Topology, x: jax.Array) -> jax.Array:
     A = x.shape[0]
     assert A == topo.n_agents, (A, topo.n_agents)
-    if topo.grid is not None:
-        P, D = topo.grid
-    else:
-        P, D = 1, A
+    P, D = topo.grid_shape()
     acc = None
     for t in topo.terms:
         if t.shift == 0 or (t.level == "flat" and A == 1):
@@ -62,64 +68,107 @@ def _mix_leaf_shifts(topo: Topology, x: jax.Array) -> jax.Array:
 
 
 def mix_shifts(topo: Topology, tree: Any) -> Any:
-    """Production engine: W as a weighted sum of agent-axis rolls
-    (→ collective-permute on a sharded mesh)."""
+    """Compiler-scheduled engine: W as a weighted sum of agent-axis rolls
+    (→ collective-permute on a sharded mesh, scheduled by GSPMD)."""
     return jax.tree.map(functools.partial(_mix_leaf_shifts, topo), tree)
 
 
-def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any) -> Any:
-    """Explicit-collective engine: ``shard_map`` + ``jax.lax.ppermute``.
+def _agent_axis_info(topo: Topology, mesh, agent_axes):
+    """Resolve agent_axes against the mesh; returns (names, sizes, split).
+
+    ``split`` is True when the topology's (P, D) agent grid maps 1:1 onto two
+    mesh sub-axes — then inter/intra terms become single sub-axis ppermutes.
+    """
+    names = (tuple(agent_axes) if isinstance(agent_axes, (tuple, list))
+             else (agent_axes,))
+    sizes = tuple(mesh.devices.shape[mesh.axis_names.index(n)] for n in names)
+    A = math.prod(sizes)
+    assert A == topo.n_agents, (A, topo.n_agents)
+    split = (len(names) == 2 and topo.grid is not None
+             and sizes == topo.grid_shape())
+    return names, sizes, split
+
+
+def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
+                 use_fused_kernel: bool = False,
+                 interpret: bool | None = None) -> Any:
+    """Production gossip engine: ``shard_map`` + ``jax.lax.ppermute``.
 
     The agent axis is *consumed* by the mesh (one agent per mesh slice along
     ``agent_axes``); every gossip term becomes one ppermute with a literal
-    source→target ring.  This is the manual-control twin of :func:`mix_shifts`
-    (which leaves the permute scheduling to GSPMD) — useful when the compiler's
-    roll lowering must be pinned, and as an executable spec of the paper's
-    communication pattern.  Leaves must carry the leading agent axis; only
-    "flat" topologies are supported (hierarchical ones decompose into two
-    nested calls).
+    source→target list taken from :meth:`Topology.term_sources`, so the
+    communication schedule is pinned rather than left to GSPMD's roll
+    lowering.  Hierarchical topologies are supported two ways:
+
+    * ``agent_axes = (pod_axis, intra_axis)`` matching ``topo.grid`` — each
+      ``inter``/``intra`` term permutes only its own mesh sub-axis (cross-pod
+      terms are the only DCI traffic);
+    * a single flat axis — grid terms are linearized into a flat permutation
+      (same wire pattern, one axis name).
+
+    With ``use_fused_kernel=True`` the per-term weighted accumulation runs as
+    one n-ary Pallas ``gossip_axpy`` combine per leaf instead of a chain of
+    mul/add HBM round-trips (DESIGN §3).
     """
     from jax.sharding import PartitionSpec as P
 
-    names = agent_axes if isinstance(agent_axes, tuple) else (agent_axes,)
-    A = 1
-    for n in names:
-        A *= mesh.devices.shape[mesh.axis_names.index(n)]
-    assert A == topo.n_agents, (A, topo.n_agents)
-    assert all(t.level == "flat" for t in topo.terms), \
-        "ppermute engine supports flat (circulant) topologies"
-    axis = names if len(names) > 1 else names[0]
+    names, sizes, split = _agent_axis_info(topo, mesh, agent_axes)
+    axis_flat = names if len(names) > 1 else names[0]
+    A = topo.n_agents
+    Pn, Dn = topo.grid_shape()
+
+    def permute_term(x, t):
+        if t.shift == 0 or A == 1:
+            return x
+        if split and t.level != "flat":
+            ax, size = ((names[0], Pn) if t.level == "inter"
+                        else (names[1], Dn))
+            if size == 1:
+                return x
+            perm = [((i - t.shift) % size, i) for i in range(size)]
+            return jax.lax.ppermute(x, ax, perm)
+        src = topo.term_sources(t)
+        perm = [(int(s), d) for d, s in enumerate(src)]
+        return jax.lax.ppermute(x, axis_flat, perm)
+
+    weights = tuple(float(t.weight) for t in topo.terms)
+
+    def combine(payloads):
+        if use_fused_kernel:
+            from repro.kernels.ops import gossip_axpy
+            return gossip_axpy(payloads, weights, interpret=interpret)
+        acc = None
+        for w, p in zip(weights, payloads):
+            term = w * p
+            acc = term if acc is None else acc + term
+        return acc
 
     def body(*leaves):
-        out = []
-        for x in leaves:
-            # x: (1, *shape) — this shard's agent replica
-            acc = None
-            for t in topo.terms:
-                if t.shift == 0:
-                    term = x * t.weight
-                else:
-                    perm = [((i - t.shift) % A, i) for i in range(A)]
-                    term = jax.lax.ppermute(x, axis, perm) * t.weight
-                acc = term if acc is None else acc + term
-            out.append(acc)
-        return tuple(out)
+        # each leaf arrives as (1, *shape) — this shard's agent replica
+        return tuple(combine([permute_term(x, t) for t in topo.terms])
+                     for x in leaves)
 
     flat, treedef = jax.tree_util.tree_flatten(tree)
-    specs = tuple(P(axis) for _ in flat)
-    out = jax.shard_map(body, mesh=mesh, in_specs=specs, out_specs=specs,
-                        check_vma=False)(*flat)
+    specs = tuple(P(axis_flat) for _ in flat)
+    out = shard_map(body, mesh, specs, specs)(*flat)
     return jax.tree_util.tree_unflatten(treedef, list(out))
 
 
 def make_mixer(topo: Topology, engine: str = "shifts", mesh=None,
-               agent_axes=None):
-    """Return ``mix(tree) -> tree``.  engine ∈ {"dense", "shifts", "ppermute"}."""
+               agent_axes=None, use_fused_kernel: bool = False):
+    """Return ``mix(tree) -> tree``.  engine ∈ {"dense", "shifts", "ppermute"}.
+
+    ``mesh``/``agent_axes`` are required for (and only used by) the ppermute
+    engine; ``use_fused_kernel`` routes its combine through the fused Pallas
+    ``gossip_axpy`` kernel.
+    """
     if engine == "dense":
         return functools.partial(mix_dense, topo)
     if engine == "shifts":
         return functools.partial(mix_shifts, topo)
     if engine == "ppermute":
-        assert mesh is not None and agent_axes is not None
-        return functools.partial(mix_ppermute, topo, mesh, agent_axes)
+        assert mesh is not None and agent_axes is not None, \
+            "ppermute engine needs mesh= and agent_axes="
+        return functools.partial(mix_ppermute, topo, mesh, agent_axes,
+                                 use_fused_kernel=use_fused_kernel)
     raise ValueError(f"unknown mixing engine: {engine}")

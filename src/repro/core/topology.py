@@ -56,30 +56,43 @@ class Topology:
     # (P, D) factorization of the agent axis for intra/inter terms; None for flat.
     grid: Optional[Tuple[int, int]] = None
 
+    # ---- per-term permutation structure ---------------------------------
+    def grid_shape(self) -> Tuple[int, int]:
+        """(P, D) factorization of the agent axis (grid, or (1, n) for flat)."""
+        if self.grid is None:
+            return 1, self.n_agents
+        P, D = self.grid
+        assert P * D == self.n_agents, (P, D, self.n_agents)
+        return P, D
+
+    def term_sources(self, t: ShiftTerm) -> np.ndarray:
+        """``src[i]`` = agent whose payload lands on agent ``i`` under term
+        ``t`` (matches ``jnp.roll`` semantics: ``x_new[i] = x[(i-shift) % n]``).
+
+        This single index map backs all three gossip engines: the dense
+        oracle scatters ``t.weight`` at ``W[i, src[i]]``, and the ppermute
+        engine turns it directly into a ``collective-permute``
+        source→target list (DESIGN §3).
+        """
+        n = self.n_agents
+        idx = np.arange(n)
+        P, D = self.grid_shape()
+        p_idx, d_idx = idx // D, idx % D
+        if t.level == "flat":
+            return (idx - t.shift) % n
+        if t.level == "intra":
+            return p_idx * D + (d_idx - t.shift) % D
+        if t.level == "inter":
+            return ((p_idx - t.shift) % P) * D + d_idx
+        raise ValueError(t.level)
+
     # ---- dense form ------------------------------------------------------
     def dense_matrix(self) -> np.ndarray:
         n = self.n_agents
         W = np.zeros((n, n), dtype=np.float64)
         idx = np.arange(n)
-        if self.grid is None:
-            P, D = 1, n
-        else:
-            P, D = self.grid
-            assert P * D == n, (P, D, n)
-        p_idx, d_idx = idx // D, idx % D
         for t in self.terms:
-            if t.level == "flat":
-                # x_new[i] += w * x[(i - shift) % n]  (matches jnp.roll semantics)
-                src = (idx - t.shift) % n
-                W[idx, src] += t.weight
-            elif t.level == "intra":
-                src = p_idx * D + (d_idx - t.shift) % D
-                W[idx, src] += t.weight
-            elif t.level == "inter":
-                src = ((p_idx - t.shift) % P) * D + d_idx
-                W[idx, src] += t.weight
-            else:  # pragma: no cover - guarded by constructor helpers
-                raise ValueError(t.level)
+            W[idx, self.term_sources(t)] += t.weight
         return W
 
     # ---- spectral properties --------------------------------------------

@@ -12,9 +12,11 @@ multi-billion-parameter scale).  This kernel performs the whole chain in one
 pass over VMEM tiles: 4 reads + 3 writes = 7 HBM touches of N elements total,
 the information-theoretic minimum.
 
-``gossip_axpy`` fuses the post-permute ring combine  w₀·c + w₁·l + w₂·r
-(center/left/right neighbor payloads) into one pass — applied after the
-collective-permutes that `jnp.roll` lowers to.
+``gossip_axpy`` fuses the post-permute combine  Σₖ wₖ·payloadₖ  (one payload
+per gossip term — center/left/right in the ring case, more for exp graphs
+and hierarchical topologies) into one pass — applied after the explicit
+``ppermute``s of the production gossip engine (DESIGN §3).  n-ary, with a
+bf16 payload path that accumulates in f32.
 
 Layout: parameters are flattened and tiled to (rows, 128) f32; one grid step
 processes a (BLOCK_ROWS, 128) tile — 8×128-aligned for the VPU, comfortably
@@ -67,21 +69,41 @@ def edm_update_flat(x, g, m, psi, *, alpha: float, beta: float,
     )(x, g, m, psi)
 
 
-def _axpy_kernel(c_ref, l_ref, r_ref, o_ref, *, w0: float, w1: float, w2: float):
-    o_ref[...] = w0 * c_ref[...] + w1 * l_ref[...] + w2 * r_ref[...]
+def _axpy_kernel(*refs, weights):
+    # refs = (in_0, ..., in_{n-1}, out); accumulate in f32 so a bf16 gossip
+    # payload only rounds once, on the final store.
+    o_ref = refs[-1]
+    acc = weights[0] * refs[0][...].astype(jnp.float32)
+    for w, r in zip(weights[1:], refs[1:-1]):
+        acc += w * r[...].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
 
 
-def gossip_axpy_flat(center, left, right, *, w0: float, w1: float, w2: float,
-                     block_rows: int = BLOCK_ROWS, interpret: bool = False):
-    """Fused ring combine  w₀·center + w₁·left + w₂·right  over (rows, 128)."""
-    rows, lane = center.shape
-    assert lane == LANE and rows % block_rows == 0
+def gossip_axpy_flat(operands, weights, *, block_rows: int = BLOCK_ROWS,
+                     interpret: bool = False):
+    """Fused n-ary gossip combine  Σₖ wₖ·operandₖ  over (rows, 128) tiles.
+
+    ``operands`` are the post-permute neighbor payloads of one gossip step
+    (one per :class:`~repro.core.topology.ShiftTerm`); ``weights`` the matching
+    mixing weights.  All operands share one shape/dtype (f32 or bf16);
+    accumulation is f32, output dtype follows the operands.  The ring case of
+    the paper's experiments is the 3-ary instance (center/left/right).
+    """
+    operands = tuple(operands)
+    weights = tuple(float(w) for w in weights)
+    assert operands and len(operands) == len(weights), (len(operands),
+                                                        len(weights))
+    rows, lane = operands[0].shape
+    assert lane == LANE and rows % block_rows == 0, (operands[0].shape,
+                                                     block_rows)
+    assert all(o.shape == operands[0].shape and o.dtype == operands[0].dtype
+               for o in operands)
     spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_axpy_kernel, w0=w0, w1=w1, w2=w2),
+        functools.partial(_axpy_kernel, weights=weights),
         grid=(rows // block_rows,),
-        in_specs=[spec] * 3,
+        in_specs=[spec] * len(operands),
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct(center.shape, center.dtype),
+        out_shape=jax.ShapeDtypeStruct(operands[0].shape, operands[0].dtype),
         interpret=interpret,
-    )(center, left, right)
+    )(*operands)

@@ -12,7 +12,7 @@ far inside the ~16 MB VMEM budget; larger blk_k amortizes loop overhead for
 long-context prefill.
 
 The sliding-window variant is the sub-quadratic path that makes dense-arch
-``long_500k`` decode admissible (DESIGN §3): FLOPs scale with window, not
+``long_500k`` decode admissible (DESIGN §2): FLOPs scale with window, not
 context, and fully-masked blocks are skipped entirely.
 """
 from __future__ import annotations

@@ -23,9 +23,12 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pack(leaf, block_rows):
-    """Flatten to (rows, LANE) f32, padded; returns (packed, orig_size, shape, dtype)."""
-    flat = leaf.reshape(-1).astype(jnp.float32)
+def _pack(leaf, block_rows, dtype=jnp.float32):
+    """Flatten to (rows, LANE), padded; ``dtype=None`` keeps the leaf dtype
+    (bf16 gossip payloads stay bf16 on the wire and in VMEM)."""
+    flat = leaf.reshape(-1)
+    if dtype is not None:
+        flat = flat.astype(dtype)
     n = flat.size
     tile = block_rows * LANE
     pad = (-n) % tile
@@ -71,17 +74,26 @@ def edm_update_tree(params: Any, grads: Any, m: Any, psi: Any, *,
     return m_new, phi, psi_new
 
 
-@functools.partial(jax.jit, static_argnames=("w0", "w1", "w2", "interpret"))
-def gossip_axpy(center, left, right, *, w0: float, w1: float, w2: float,
-                interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("weights", "interpret"))
+def _gossip_axpy_jit(operands, weights, interpret):
+    first = operands[0]
+    packed = [_pack(o, 512, dtype=None)[0] for o in operands]
+    n = first.size
+    out = gossip_axpy_flat(packed, weights, interpret=interpret)
+    return _unpack(out, n, first.shape, first.dtype)
+
+
+def gossip_axpy(operands, weights, *, interpret: bool | None = None):
+    """n-ary fused gossip combine  Σₖ wₖ·operandₖ  for arbitrary-shape arrays.
+
+    All operands must share one shape and dtype (f32 or bf16).  This is the
+    array-level entry the ppermute mixing engine calls once per leaf after
+    its collective-permutes (DESIGN §3).
+    """
     if interpret is None:
         interpret = not _on_tpu()
-    cp, n = _pack(center, 512)
-    lp, _ = _pack(left, 512)
-    rp, _ = _pack(right, 512)
-    out = gossip_axpy_flat(cp, lp, rp, w0=w0, w1=w1, w2=w2,
-                           interpret=interpret)
-    return _unpack(out, n, center.shape, center.dtype)
+    return _gossip_axpy_jit(tuple(operands),
+                            tuple(float(w) for w in weights), interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",

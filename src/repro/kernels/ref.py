@@ -16,8 +16,11 @@ def edm_update_ref(x, g, m, psi, *, alpha: float, beta: float):
     return m_new, psi_new, phi
 
 
-def gossip_axpy_ref(center, left, right, *, w0, w1, w2):
-    return w0 * center + w1 * left + w2 * right
+def gossip_axpy_ref(operands, weights):
+    """n-ary combine  Σₖ wₖ·operandₖ  with f32 accumulation (matches the
+    kernel's bf16 path: one rounding, on the final store)."""
+    acc = sum(w * o.astype(jnp.float32) for w, o in zip(weights, operands))
+    return acc.astype(operands[0].dtype)
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):

@@ -12,8 +12,10 @@ Mesh axes:
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "make_sim_mesh", "HW"]
+__all__ = ["make_production_mesh", "make_sim_mesh", "make_gossip_mesh",
+           "gossip_agent_axes", "HW"]
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).
@@ -34,3 +36,33 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_sim_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_gossip_mesh(n_agents: int, pods: int = 1):
+    """Mesh whose device grid is exactly the agent grid — one agent per
+    device, as the ppermute engine requires (DESIGN §3).
+
+    Builds over the first ``n_agents`` devices so it also works on a
+    host-platform mesh forced larger than needed
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  Shape is
+    ``(pods, n_agents // pods)`` with axes ``('pod', 'data')`` for
+    hierarchical topologies, else ``(n_agents,)`` with ``('data',)``.
+    """
+    from jax.sharding import Mesh
+
+    assert n_agents % max(pods, 1) == 0, (n_agents, pods)
+    devices = jax.devices()
+    assert len(devices) >= n_agents, \
+        f"need {n_agents} devices for one-agent-per-device gossip, " \
+        f"have {len(devices)}"
+    if pods > 1:
+        grid = np.array(devices[:n_agents]).reshape(pods, n_agents // pods)
+        return Mesh(grid, ("pod", "data"))
+    return Mesh(np.array(devices[:n_agents]), ("data",))
+
+
+def gossip_agent_axes(mesh):
+    """The agent_axes tuple/name the gossip engines consume on ``mesh``."""
+    names = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    assert names, mesh.axis_names
+    return names if len(names) > 1 else names[0]

@@ -33,6 +33,15 @@ def main():
     ap.add_argument("--per-agent-batch", type=int, default=1)
     ap.add_argument("--algorithm", default="edm")
     ap.add_argument("--topology", default="ring")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod count for torus/hier topologies")
+    ap.add_argument("--gossip-engine", default="shifts",
+                    choices=["dense", "shifts", "ppermute"],
+                    help="mixing engine; ppermute needs one device per agent "
+                         "(set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N on CPU)")
+    ap.add_argument("--fused-kernel", action="store_true",
+                    help="fused Pallas EDM update + gossip combine")
     ap.add_argument("--alpha", type=float, default=0.2)
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--phi", type=float, default=0.2,
@@ -45,11 +54,17 @@ def main():
     run = RunConfig(global_batch=args.agents * args.per_agent_batch,
                     seq_len=args.seq, algorithm=args.algorithm,
                     alpha=args.alpha, beta=args.beta, topology=args.topology,
-                    remat=False)
-    topo = make_topology(run, args.agents)
+                    gossip_engine=args.gossip_engine, remat=False)
+    topo = make_topology(run, args.agents, pods=args.pods)
+    mesh = agent_axes = None
+    if args.gossip_engine == "ppermute":
+        from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
+        mesh = make_gossip_mesh(args.agents, pods=args.pods)
+        agent_axes = gossip_agent_axes(mesh)
     print(f"arch={cfg.name} ({cfg.n_params()/1e6:.1f}M params) "
           f"agents={args.agents} topo={args.topology} λ={topo.lam():.4f} "
-          f"alg={args.algorithm}")
+          f"alg={args.algorithm} engine={args.gossip_engine}"
+          f"{' +fused' if args.fused_kernel else ''}")
 
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        n_agents=args.agents, phi=args.phi)
@@ -65,7 +80,9 @@ def main():
         return b
 
     state = init_state(model, run, args.agents, jax.random.PRNGKey(0))
-    step = jax.jit(build_train_step(model, run, topo))
+    step = jax.jit(build_train_step(model, run, topo,
+                                    use_fused_kernel=args.fused_kernel,
+                                    mesh=mesh, agent_axes=agent_axes))
     key = jax.random.PRNGKey(1)
     t0 = time.time()
     for t in range(args.steps):

@@ -117,7 +117,7 @@ def apply_moe_shard_map(p: Dict, cfg, x: jax.Array, eps: float, mesh):
     combine is ONE activation-sized psum over 'model' (identical cost to a
     dense row-parallel FFN).  No dispatch all-reduce, no all-to-all.
     """
-    shard_map = jax.shard_map  # jax >= 0.8
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     B, S, d = x.shape
@@ -153,7 +153,6 @@ def apply_moe_shard_map(p: Dict, cfg, x: jax.Array, eps: float, mesh):
         body, mesh=mesh,
         in_specs=(P(d_ax, None), P(None, None), specs_w, specs_w, specs_w),
         out_specs=(P(d_ax, None), P()),
-        check_vma=False,
     )(flat, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
     y = out_flat.reshape(B, S, d)

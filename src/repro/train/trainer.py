@@ -63,12 +63,22 @@ def _cast_mixer(mix, dtype: Optional[str]):
 
 
 def build_train_step(model: Model, run: RunConfig, topo: Topology,
-                     use_fused_kernel: bool = False) -> Callable:
+                     use_fused_kernel: bool = False, mesh=None,
+                     agent_axes=None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch leaves: (A, per_agent_batch, ...).
+
+    ``run.gossip_engine`` selects the mixing engine; the ppermute engine
+    additionally needs ``mesh``/``agent_axes`` (one agent per mesh slice,
+    see DESIGN §3) and honors ``use_fused_kernel`` for its combine, so
+    ``engine="ppermute"`` + ``use_fused_kernel=True`` composes the fused
+    gossip path with the fused EDM update end-to-end.
     """
-    mix = _cast_mixer(make_mixer(topo), run.gossip_dtype)
+    mix = _cast_mixer(
+        make_mixer(topo, engine=run.gossip_engine, mesh=mesh,
+                   agent_axes=agent_axes, use_fused_kernel=use_fused_kernel),
+        run.gossip_dtype)
     kw = dict(use_fused_kernel=use_fused_kernel) if run.algorithm == "edm" else {}
     opt = make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta,
                          mix=mix, **kw)

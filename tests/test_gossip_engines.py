@@ -1,0 +1,169 @@
+"""Production gossip path: n-ary fused combine kernel + ppermute engine.
+
+Hypothesis-free coverage (runs everywhere):
+
+* the n-ary ``gossip_axpy`` Pallas kernel vs its jnp oracle, f32 and bf16,
+  interpret mode;
+* ``mix_ppermute == mix_dense`` on every shipped topology (flat *and*
+  hierarchical, split and linearized agent axes, fused and unfused combine)
+  on a multi-device host-platform mesh — run in a subprocess so the forced
+  device count cannot leak into this test process;
+* EDM composed with the fused ppermute mixer matches the dense-mixer run.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.edm_update import gossip_axpy_flat
+
+jax.config.update("jax_enable_x64", False)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ,
+       "PYTHONPATH": os.path.join(REPO, "src")
+       + (os.pathsep + os.environ["PYTHONPATH"]
+          if os.environ.get("PYTHONPATH") else "")}
+
+
+# ---------------------------------------------------------------------------
+# n-ary gossip_axpy kernel vs oracle
+# ---------------------------------------------------------------------------
+
+WEIGHT_SETS = [
+    (0.5, 0.25, 0.25),                      # paper's ring
+    (1.0,),                                 # identity / disconnected
+    (0.4, 0.3, 0.2, 0.1),                   # asymmetric 4-term
+    tuple([1.0 / 6] * 6),                   # hierarchical 6-term
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("weights", WEIGHT_SETS,
+                         ids=lambda w: f"n{len(w)}")
+def test_gossip_axpy_flat_nary_matches_ref(weights, dtype):
+    shape = (512, 128)
+    ks = jax.random.split(jax.random.PRNGKey(0), len(weights))
+    operands = tuple(jax.random.normal(k, shape).astype(dtype) for k in ks)
+    out = gossip_axpy_flat(operands, weights, interpret=True)
+    want = ref.gossip_axpy_ref(operands, weights)
+    assert out.dtype == dtype
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_gossip_axpy_bf16_accumulates_in_f32():
+    """bf16 path must round once (on the store), not per term: summing many
+    small terms in bf16 would lose them to the large one."""
+    n = 8
+    big = jnp.full((512, 128), 1024.0, jnp.bfloat16)
+    small = jnp.full((512, 128), 1.0, jnp.bfloat16)
+    operands = (big,) + (small,) * (n - 1)
+    weights = (1.0,) + (1.0,) * (n - 1)
+    out = gossip_axpy_flat(operands, weights, interpret=True)
+    # f32 accumulation: 1024 + 7 = 1031 → rounds to 1032 in bf16.
+    # per-term bf16 accumulation would stick at 1024 (1 < ulp(1024)=8... each
+    # add of 1 rounds away) — guard the f32-accumulate contract.
+    np.testing.assert_allclose(np.asarray(out, np.float32), 1032.0)
+
+
+@pytest.mark.parametrize("shape", [(7,), (130,), (3, 5, 17), (1000, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_gossip_axpy_arbitrary_shapes(shape, dtype):
+    """ops.gossip_axpy packs any shape and returns the original layout/dtype."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    operands = tuple(jax.random.normal(k, shape).astype(dtype) for k in ks)
+    weights = (0.5, 0.25, 0.25)
+    out = ops.gossip_axpy(operands, weights, interpret=True)
+    assert out.shape == shape and out.dtype == dtype
+    want = ref.gossip_axpy_ref(operands, weights)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# mix_ppermute == mix_dense over every shipped topology
+# ---------------------------------------------------------------------------
+
+_AGREEMENT_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core import (disconnected, exp_graph, fully_connected,
+                        hierarchical, make_mixer, ring, torus2d)
+from repro.core.mixing import mix_dense, mix_ppermute
+
+def submesh(shape, names):
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, names)
+
+# mirrors tests/test_core.py::TOPOLOGIES
+TOPOLOGIES = [
+    ring(8), ring(32), exp_graph(16), torus2d(2, 8), torus2d(4, 4),
+    fully_connected(8), hierarchical(2, 16), hierarchical(4, 4, intra="ring"),
+    disconnected(8),
+]
+
+for topo in TOPOLOGIES:
+    A = topo.n_agents
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (A, 5)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (A, 2, 3))}
+    want = mix_dense(topo, tree)
+    meshes = [(submesh((A,), ("agents",)), "agents")]
+    if topo.grid is not None:  # hierarchical: also the split (pod, data) mesh
+        meshes.append((submesh(topo.grid, ("pod", "data")), ("pod", "data")))
+    for mesh, axes in meshes:
+        for fused in (False, True):
+            mixer = make_mixer(topo, "ppermute", mesh=mesh, agent_axes=axes,
+                               use_fused_kernel=fused)
+            got = jax.jit(mixer)(tree)
+            for k in tree:
+                np.testing.assert_allclose(
+                    np.asarray(got[k]), np.asarray(want[k]),
+                    rtol=1e-5, atol=1e-6,
+                    err_msg=f"{topo.name}-{A} axes={axes} fused={fused} {k}")
+    print(f"AGREE {topo.name}-{A}")
+
+# EDM composed with the fused ppermute mixer == EDM with the dense mixer
+from repro.core import make_optimizer
+topo = ring(8)
+mesh, axes = submesh((8,), ("agents",)), "agents"
+x0 = jax.random.normal(jax.random.PRNGKey(2), (8, 6))
+g = 0.1 * jax.random.normal(jax.random.PRNGKey(3), (8, 6))
+runs = {}
+for label, mixer in (
+        ("dense", make_mixer(topo, "dense")),
+        ("ppermute", make_mixer(topo, "ppermute", mesh=mesh, agent_axes=axes,
+                                use_fused_kernel=True))):
+    opt = make_optimizer("edm", alpha=0.05, beta=0.9, mix=mixer)
+    x, st = x0, opt.init(x0)
+    for _ in range(3):
+        x, st = opt.step(x, g, st)
+    runs[label] = x
+np.testing.assert_allclose(np.asarray(runs["ppermute"]),
+                           np.asarray(runs["dense"]), rtol=1e-5, atol=1e-6)
+print("AGREEMENT_OK")
+"""
+
+
+def test_ppermute_agrees_with_dense_all_topologies():
+    """Acceptance: make_mixer(engine="ppermute") matches mix_dense to 1e-5 on
+    every topology in test_core.TOPOLOGIES, split and flat meshes, with and
+    without the fused Pallas combine — and composes with the EDM optimizer."""
+    r = subprocess.run([sys.executable, "-c", _AGREEMENT_CODE], cwd=REPO,
+                       env=ENV, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "AGREEMENT_OK" in r.stdout

@@ -1,11 +1,16 @@
 """Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
-with shape/dtype sweeps and hypothesis property tests."""
+with shape/dtype sweeps and hypothesis property tests.
+
+Requires the optional ``test`` extra (hypothesis); the hypothesis-free kernel
+coverage lives in tests/test_gossip_engines.py."""
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
@@ -96,11 +101,11 @@ def test_edm_kernel_inside_optimizer():
 @pytest.mark.parametrize("shape", [(512, 128), (2048, 128)])
 def test_gossip_axpy_matches_ref(shape):
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
-    c, l, r = (jax.random.normal(k, shape, jnp.float32) for k in ks)
-    out = gossip_axpy_flat(c, l, r, w0=0.5, w1=0.25, w2=0.25, interpret=True)
-    np.testing.assert_allclose(
-        out, ref.gossip_axpy_ref(c, l, r, w0=0.5, w1=0.25, w2=0.25),
-        rtol=1e-6, atol=1e-6)
+    ops3 = tuple(jax.random.normal(k, shape, jnp.float32) for k in ks)
+    ws = (0.5, 0.25, 0.25)
+    out = gossip_axpy_flat(ops3, ws, interpret=True)
+    np.testing.assert_allclose(out, ref.gossip_axpy_ref(ops3, ws),
+                               rtol=1e-6, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,10 @@ def test_dryrun_existing_artifacts_complete():
             rec = json.load(f)
         assert rec.get("ok"), name
         n_ok += 1
+    if n_ok == 0:
+        # only tagged one-off artifacts on disk (e.g. the citest record the
+        # CLI test above writes) — the 80-combo sweep was never run here
+        pytest.skip("sweep artifacts not present")
     assert n_ok == 80, n_ok
 
 

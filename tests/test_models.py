@@ -118,7 +118,10 @@ def test_moe_routing_is_sparse():
     params = model.init(jax.random.PRNGKey(0))
     batch = _make_batch(cfg, jax.random.PRNGKey(1), B=2, S=64)
     c = jax.jit(model.loss).lower(params, batch).compile()
-    fl = c.cost_analysis()["flops"]
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 returns [dict]
+        ca = ca[0]
+    fl = ca["flops"]
     # dense-all-experts lower bound: E/k ratio would inflate flops ~2x+
     T = 2 * 64
     d, ff, E, k = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.experts_per_token

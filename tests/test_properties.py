@@ -1,10 +1,14 @@
-"""Property-based (hypothesis) tests on system invariants."""
+"""Property-based (hypothesis) tests on system invariants.
+
+Requires the optional ``test`` extra (hypothesis)."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import ModelConfig
