@@ -1,7 +1,7 @@
 """Microbenchmarks of the gossip/optimizer hot path (CPU wall-clock; the
 derived column carries the analytically modeled TPU HBM-traffic ratio).
 
-Two parts:
+Three parts:
 
 * in-process engine benches on the current device set (dense vs shifts,
   EDM step fused vs unfused);
@@ -10,7 +10,19 @@ Two parts:
   ``XLA_FLAGS=--xla_force_host_platform_device_count=32`` so it works
   regardless of the parent's device count.  This is the acceptance bench
   for the production ppermute path: on the paper's n=32 ring the
-  fused-combine ppermute engine must come in at ≤ the shifts engine.
+  fused-combine ppermute engine must come in at ≤ the shifts engine;
+* an engine × *schedule* sweep (``--schedule``, DESIGN §4) reporting
+  per-step wall time AND per-step wire bytes (the model from
+  ``repro.core.schedule.wire_bytes_per_step``) for the static exp graph vs
+  the one-peer round-robin schedule vs alternating hierarchical — including
+  the blocked A=32-on-8-devices ppermute case.  Results land in
+  ``BENCH_gossip.json`` at the repo root (the bench trajectory artifact CI
+  uploads).
+
+CLI::
+
+    python -m benchmarks.gossip_micro --schedule round_robin --steps 8
+    python -m benchmarks.gossip_micro --schedule all --block-rows 256
 """
 from __future__ import annotations
 
@@ -23,7 +35,9 @@ from typing import Dict, List
 import jax
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO, "BENCH_gossip.json")
 _SWEEP_MARKER = "SWEEP_CSV_JSON:"
+_SCHED_MARKER = "SCHED_JSON:"
 
 
 def _sweep_cases():
@@ -69,6 +83,133 @@ def sweep(d: int = 1 << 16, iters: int = 20) -> List[str]:
                 f"n={A};d={d};terms={len(topo.terms)};"
                 f"speedup_vs_shifts={us_shifts / us:.2f}x"))
     return lines
+
+
+def _schedule_cases(which: str):
+    from repro.core import (AlternatingHierarchical, RoundRobinExp,
+                            StaticSchedule, exp_graph)
+    cases = {
+        "static": StaticSchedule(exp_graph(32)),
+        "round_robin": RoundRobinExp(32),
+        "alt_hier": AlternatingHierarchical(4, 8),
+    }
+    if which != "all":
+        cases = {which: cases[which]}
+    return cases
+
+
+def schedule_sweep(which: str = "all", steps: int = 8, d: int = 1 << 16,
+                   iters: int = 20, block_rows: int = 0) -> List[dict]:
+    """Engine × schedule sweep: us/step and wire bytes/step over ``steps``
+    consecutive schedule steps (each distinct round is compiled and timed
+    once, then weighted by how often it occurs in the window — so steps=8
+    over a period-5 schedule weights rounds 0–2 twice).
+
+    Needs 32 host devices.  The blocked config packs the 32 agents onto 8
+    devices (B = 4) — the multi-agent-per-device path.  ``block_rows``
+    reaches the fused kernel via REPRO_BLOCK_ROWS, which the parent process
+    exports before this subprocess imports the kernels; the recorded value
+    is the effective one.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import make_schedule_mixer, wire_bytes_per_step
+    from repro.kernels.edm_update import BLOCK_ROWS
+    from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
+    from .common import timeit_us
+
+    if block_rows:
+        assert block_rows == BLOCK_ROWS, \
+            (block_rows, BLOCK_ROWS, "REPRO_BLOCK_ROWS not exported?")
+    results = []
+    for sname, sched in _schedule_cases(which).items():
+        A = sched.n_agents
+        configs = {
+            "shifts": dict(engine="shifts", apd=1),
+            "ppermute": dict(engine="ppermute", apd=1),
+            "ppermute_fused": dict(engine="ppermute", apd=1, fused=True),
+            "ppermute_fused_b4": dict(engine="ppermute", apd=4, fused=True),
+        }
+        for cname, c in configs.items():
+            apd = c["apd"]
+            mesh = axes = None
+            if c["engine"] == "ppermute":
+                mesh = make_gossip_mesh(A, agents_per_device=apd)
+                axes = gossip_agent_axes(mesh)
+            mix = make_schedule_mixer(sched, c["engine"], mesh=mesh,
+                                      agent_axes=axes,
+                                      use_fused_kernel=c.get("fused", False))
+            x = jax.random.normal(jax.random.PRNGKey(0), (A, d))
+            if mesh is not None:
+                x = jax.device_put(x, NamedSharding(mesh, P(axes)))
+            # one jitted application per distinct round (concrete step →
+            # no switch), weighted over the `steps`-step window
+            us_round = {r: timeit_us(jax.jit(lambda t, r=r: mix(t, step=r)),
+                                     x, iters=max(iters // sched.period, 2))
+                        for r in range(sched.period)}
+            us = sum(us_round[t % sched.period] for t in range(steps)) / steps
+            wire = sum(wire_bytes_per_step(sched, t, elems_per_agent=d,
+                                           agents_per_device=apd,
+                                           engine=c["engine"])
+                       for t in range(steps)) / steps
+            results.append({
+                "schedule": sname, "config": cname, "engine": c["engine"],
+                "agents": A, "agents_per_device": apd, "d": d,
+                "period": sched.period, "steps": steps,
+                "block_rows": BLOCK_ROWS,
+                "us_per_step": round(us, 1),
+                "wire_bytes_per_step": int(wire),
+                "permutes_per_step": max(
+                    sum(1 for t in rnd.terms if t.shift != 0)
+                    for rnd in sched.rounds),
+            })
+    return results
+
+
+def _schedule_subprocess(which: str, steps: int,
+                         block_rows: int = 0) -> List[dict]:
+    """Run :func:`schedule_sweep` under a 32-device host platform."""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=32",
+           "PYTHONPATH": os.path.join(REPO, "src")
+           + (os.pathsep + os.environ["PYTHONPATH"]
+              if os.environ.get("PYTHONPATH") else "")}
+    if block_rows:
+        env["REPRO_BLOCK_ROWS"] = str(block_rows)
+    r = subprocess.run([sys.executable, "-m", "benchmarks.gossip_micro",
+                        "--schedule-inner", which, "--steps", str(steps),
+                        "--block-rows", str(block_rows)],
+                       cwd=REPO, env=env, capture_output=True, text=True,
+                       timeout=900)
+    for line in r.stdout.splitlines():
+        if line.startswith(_SCHED_MARKER):
+            return json.loads(line[len(_SCHED_MARKER):])
+    raise RuntimeError(f"schedule sweep failed:\n{r.stdout[-2000:]}"
+                       f"\n{r.stderr[-2000:]}")
+
+
+def _sched_csv_rows(rows: List[dict]) -> List[str]:
+    from .common import csv_row
+    return [csv_row(
+        f"gossip_sched/{row['schedule']}/{row['config']}",
+        row["us_per_step"],
+        f"n={row['agents']};B={row['agents_per_device']};"
+        f"wire_bytes={row['wire_bytes_per_step']};"
+        f"permutes={row['permutes_per_step']}") for row in rows]
+
+
+def write_bench_json(results: List[dict]) -> str:
+    """Persist the schedule sweep to BENCH_gossip.json at the repo root."""
+    payload = {
+        "bench": "gossip_schedule_sweep",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return BENCH_JSON
 
 
 def _sweep_subprocess() -> List[str]:
@@ -131,14 +272,58 @@ def run(verbose: bool = True) -> Dict:
         if verbose:
             print(f"  [engine sweep skipped: {e}]")
 
+    # engine × schedule sweep (static vs round_robin vs alt_hier) + wire bytes
+    try:
+        sched_rows = _schedule_subprocess("all", steps=8)
+        lines.extend(_sched_csv_rows(sched_rows))
+        results["bench_json"] = write_bench_json(sched_rows)
+        if verbose:
+            print(f"  [schedule sweep -> {results['bench_json']}]")
+    except Exception as e:  # pragma: no cover - environment-dependent
+        lines.append(csv_row("gossip_sched/sweep", float("nan"),
+                             f"skipped:{type(e).__name__}"))
+        if verbose:
+            print(f"  [schedule sweep skipped: {e}]")
+
     results["csv"] = lines
     if verbose:
         print("\n".join("  " + l for l in lines))
     return results
 
 
-if __name__ == "__main__":
-    if "--sweep" in sys.argv:
+def _cli() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="(inner) engine×topology sweep; needs 32 devices")
+    ap.add_argument("--schedule-inner", default=None,
+                    help="(inner) engine×schedule sweep; needs 32 devices")
+    ap.add_argument("--schedule", default=None,
+                    choices=["static", "round_robin", "alt_hier", "all"],
+                    help="run the engine×schedule sweep (in a 32-device "
+                         "subprocess) and write BENCH_gossip.json")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="steps per schedule config")
+    ap.add_argument("--block-rows", type=int, default=0,
+                    help="Pallas BLOCK_ROWS override for the fused combine "
+                         "(0 = REPRO_BLOCK_ROWS / default)")
+    args = ap.parse_args()
+
+    if args.sweep:
         print(_SWEEP_MARKER + json.dumps(sweep()))
+    elif args.schedule_inner:
+        print(_SCHED_MARKER + json.dumps(schedule_sweep(
+            args.schedule_inner, steps=args.steps,
+            block_rows=args.block_rows)))
+    elif args.schedule:
+        rows = _schedule_subprocess(args.schedule, steps=args.steps,
+                                    block_rows=args.block_rows)
+        print("\n".join(_sched_csv_rows(rows)))
+        print(f"wrote {write_bench_json(rows)}")
     else:
         print("\n".join(run()["csv"]))
+
+
+if __name__ == "__main__":
+    _cli()

@@ -165,6 +165,12 @@ class RunConfig:
     topology: str = "ring"           # ring | exp | torus | full | hier
     agents: str = "data"             # data | pod  (DESIGN §3)
     gossip_engine: str = "shifts"    # dense | shifts | ppermute  (DESIGN §3)
+    # time-varying gossip (DESIGN §4): static wraps `topology`; round_robin =
+    # one-peer exp rounds; alt_hier = intra-pod rounds + one inter-pod round
+    gossip_schedule: str = "static"  # static | round_robin | alt_hier
+    gossip_period: int = 0           # alt_hier: intra rounds per inter (0→1)
+    gossip_seed: int = 0             # round_robin: offset-order shuffle (0=off)
+    agents_per_device: int = 1       # blocked ppermute: A > device count (§4)
     gossip_dtype: str = "float32"    # bf16 payload is a §Perf lever
     gossip_every: int = 1            # gossip every k steps (local-EDM, §Perf)
     moe_sharding: bool = False       # explicit MoE dispatch constraints (§Perf)

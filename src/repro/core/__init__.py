@@ -1,8 +1,15 @@
 """repro.core — the paper's contribution: EDM and the decentralized substrate."""
 from .topology import (  # noqa: F401
     Topology, ShiftTerm, ring, exp_graph, torus2d, fully_connected,
-    hierarchical, disconnected, spectral_stats,
+    hierarchical, disconnected, spectral_stats, matrix_lam,
 )
-from .mixing import mix_dense, mix_shifts, mix_ppermute, make_mixer  # noqa: F401
+from .mixing import (  # noqa: F401
+    mix_dense, mix_shifts, mix_ppermute, make_mixer, make_schedule_mixer,
+    accumulate_f32,
+)
+from .schedule import (  # noqa: F401
+    GossipSchedule, StaticSchedule, RoundRobinExp, AlternatingHierarchical,
+    make_schedule, wire_bytes_per_step,
+)
 from .optimizers import DecOptimizer, make_optimizer, ALGORITHMS  # noqa: F401
 from . import metrics  # noqa: F401

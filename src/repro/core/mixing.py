@@ -12,7 +12,14 @@ Three interchangeable engines (tests assert they agree to float tolerance):
   weighted accumulation optionally fused into a single n-ary Pallas combine
   (:func:`repro.kernels.ops.gossip_axpy`).  Hierarchical topologies decompose
   per term onto the matching mesh sub-axis, so intra-pod permutes never leave
-  the pod's ICI domain.
+  the pod's ICI domain.  When the topology has more agents than the mesh has
+  devices (A = B·M, B > 1) the engine runs *blocked*: each device carries a
+  contiguous block of B agents and every roll term decomposes into a local
+  shift plus at most two boundary permutes (DESIGN §4).
+
+All engines take one gossip *round* — a :class:`Topology`; time-varying
+schedules hand the engines a different round per step through
+:func:`make_schedule_mixer` (DESIGN §4).
 
 All engines operate leaf-wise on arbitrary pytrees whose leaves have leading
 dim ``A = n_agents``.
@@ -30,22 +37,43 @@ from repro.compat import shard_map
 
 from .topology import Topology
 
-__all__ = ["mix_dense", "mix_shifts", "mix_ppermute", "make_mixer"]
+__all__ = ["mix_dense", "mix_shifts", "mix_ppermute", "make_mixer",
+           "make_schedule_mixer", "accumulate_f32"]
+
+
+def accumulate_f32(fn):
+    """Wrap a tree→tree op so sub-f32 leaves accumulate in f32 and round
+    once on the way out.
+
+    The single cast-and-restore helper behind both the dense engine's bf16
+    matmul path and the trainer's low-precision gossip payload
+    (``RunConfig.gossip_dtype``): inputs are upcast to f32 where they are
+    low-precision, ``fn`` runs, and the result is cast back to the input
+    leaves' dtypes — so precision is lost exactly once, on the final store.
+    """
+
+    def wrapped(tree):
+        up = jax.tree.map(
+            lambda x: x.astype(jnp.float32)
+            if x.dtype in (jnp.bfloat16, jnp.float16) else x, tree)
+        out = fn(up)
+        return jax.tree.map(lambda o, x: o.astype(x.dtype), out, tree)
+
+    return wrapped
 
 
 def _mix_leaf_dense(W: jax.Array, x: jax.Array) -> jax.Array:
-    # x: (A, ...) -> contract over agent axis.
+    # x: (A, ...) -> contract over agent axis (f32 by accumulate_f32).
     flat = x.reshape(x.shape[0], -1)
-    out = (W.astype(flat.dtype) @ flat) if flat.dtype != jnp.bfloat16 else (
-        W.astype(jnp.float32) @ flat.astype(jnp.float32)
-    ).astype(jnp.bfloat16)
-    return out.reshape(x.shape)
+    return (W.astype(flat.dtype) @ flat).reshape(x.shape)
 
 
 def mix_dense(topo: Topology, tree: Any) -> Any:
     """Oracle engine: explicit dense W matmul over the agent axis."""
     W = jnp.asarray(topo.dense_matrix(), dtype=jnp.float32)
-    return jax.tree.map(functools.partial(_mix_leaf_dense, W), tree)
+    return accumulate_f32(
+        functools.partial(jax.tree.map, functools.partial(_mix_leaf_dense, W))
+    )(tree)
 
 
 def _mix_leaf_shifts(topo: Topology, x: jax.Array) -> jax.Array:
@@ -74,19 +102,63 @@ def mix_shifts(topo: Topology, tree: Any) -> Any:
 
 
 def _agent_axis_info(topo: Topology, mesh, agent_axes):
-    """Resolve agent_axes against the mesh; returns (names, sizes, split).
+    """Resolve agent_axes against the mesh; returns (names, sizes, split, B).
 
+    ``B`` is the number of agents per device (blocked mode when > 1: the
+    topology's A agents live as contiguous blocks of B on M = A/B devices).
     ``split`` is True when the topology's (P, D) agent grid maps 1:1 onto two
     mesh sub-axes — then inter/intra terms become single sub-axis ppermutes.
     """
     names = (tuple(agent_axes) if isinstance(agent_axes, (tuple, list))
              else (agent_axes,))
     sizes = tuple(mesh.devices.shape[mesh.axis_names.index(n)] for n in names)
-    A = math.prod(sizes)
-    assert A == topo.n_agents, (A, topo.n_agents)
-    split = (len(names) == 2 and topo.grid is not None
+    M = math.prod(sizes)
+    assert topo.n_agents % M == 0, \
+        f"agent count {topo.n_agents} must be a multiple of the mesh agent " \
+        f"extent {M} (axes {names})"
+    B = topo.n_agents // M
+    assert B == 1 or len(names) == 1, \
+        "blocked gossip (agents > devices) needs a single flat agent axis"
+    split = (B == 1 and len(names) == 2 and topo.grid is not None
              and sizes == topo.grid_shape())
-    return names, sizes, split
+    return names, sizes, split, B
+
+
+def _blocked_roll(x, shift: int, bloc: int, n_ring: int, n_dev: int,
+                  axis_name):
+    """Blocked circulant roll: the device-local slice of
+    ``roll(x_global, shift)`` where each of ``n_ring`` consecutive devices
+    holds ``bloc`` consecutive elements of one ring (rings tile the ``n_dev``
+    devices contiguously — one ring per pod, or one global ring).
+
+    Decompose shift = q·bloc + r: local rows [0, bloc−r) come from the
+    device q hops back, the r boundary rows from q+1 hops back — at most two
+    permutes, and parts whose hop count is ≡ 0 (mod ring) stay local, so a
+    sub-block shift ships only its r boundary rows.
+    """
+    n_elems = bloc * n_ring
+    s = shift % n_elems
+    if s == 0:
+        return x
+    q, r = divmod(s, bloc)
+
+    def perm(hops):
+        hops %= n_ring
+        pairs = []
+        for d in range(n_dev):
+            g, c = divmod(d, n_ring)
+            pairs.append((g * n_ring + (c - hops) % n_ring, d))
+        return pairs
+
+    p1 = x[:bloc - r] if r else x
+    if q % n_ring:
+        p1 = jax.lax.ppermute(p1, axis_name, perm(q))
+    if not r:
+        return p1
+    p2 = x[bloc - r:]
+    if (q + 1) % n_ring:
+        p2 = jax.lax.ppermute(p2, axis_name, perm(q + 1))
+    return jnp.concatenate([p2, p1], axis=0)
 
 
 def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
@@ -94,17 +166,19 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
                  interpret: bool | None = None) -> Any:
     """Production gossip engine: ``shard_map`` + ``jax.lax.ppermute``.
 
-    The agent axis is *consumed* by the mesh (one agent per mesh slice along
-    ``agent_axes``); every gossip term becomes one ppermute with a literal
-    source→target list taken from :meth:`Topology.term_sources`, so the
-    communication schedule is pinned rather than left to GSPMD's roll
-    lowering.  Hierarchical topologies are supported two ways:
+    The agent axis is *consumed* by the mesh (a block of A/M agents per mesh
+    slice along ``agent_axes``); every gossip term becomes at most two
+    ppermutes with literal source→target lists, so the communication
+    schedule is pinned rather than left to GSPMD's roll lowering.
 
-    * ``agent_axes = (pod_axis, intra_axis)`` matching ``topo.grid`` — each
-      ``inter``/``intra`` term permutes only its own mesh sub-axis (cross-pod
-      terms are the only DCI traffic);
-    * a single flat axis — grid terms are linearized into a flat permutation
-      (same wire pattern, one axis name).
+    * One agent per device (B = 1): each term is one ppermute straight from
+      :meth:`Topology.term_sources`; hierarchical topologies decompose onto
+      split ``(pod, data)`` mesh axes, or linearize onto one flat axis.
+    * Blocked (B > 1, the A > device-count mode): flat and inter terms run
+      the blocked-roll decomposition (:func:`_blocked_roll` — local shift +
+      boundary permutes, sub-block shifts ship only boundary rows); intra
+      terms are fully local when each device holds whole pods, else run the
+      blocked roll on the pod's device sub-ring.
 
     With ``use_fused_kernel=True`` the per-term weighted accumulation runs as
     one n-ary Pallas ``gossip_axpy`` combine per leaf instead of a chain of
@@ -112,14 +186,30 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
     """
     from jax.sharding import PartitionSpec as P
 
-    names, sizes, split = _agent_axis_info(topo, mesh, agent_axes)
+    names, sizes, split, B = _agent_axis_info(topo, mesh, agent_axes)
     axis_flat = names if len(names) > 1 else names[0]
     A = topo.n_agents
+    M = A // B
     Pn, Dn = topo.grid_shape()
+
+    def permute_term_blocked(x, t):
+        if t.level == "flat":
+            return _blocked_roll(x, t.shift, B, M, M, axis_flat)
+        if t.level == "inter":
+            # an inter roll by s pods is the flat roll by s·D agents
+            return _blocked_roll(x, t.shift * Dn, B, M, M, axis_flat)
+        if B % Dn == 0:          # whole pods per device: local roll
+            g = x.reshape((B // Dn, Dn) + x.shape[1:])
+            return jnp.roll(g, t.shift, axis=1).reshape(x.shape)
+        assert Dn % B == 0, \
+            f"blocked intra gossip needs pod size {Dn} and block {B} aligned"
+        return _blocked_roll(x, t.shift, B, Dn // B, M, axis_flat)
 
     def permute_term(x, t):
         if t.shift == 0 or A == 1:
             return x
+        if B > 1:
+            return permute_term_blocked(x, t)
         if split and t.level != "flat":
             ax, size = ((names[0], Pn) if t.level == "inter"
                         else (names[1], Dn))
@@ -144,7 +234,7 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
         return acc
 
     def body(*leaves):
-        # each leaf arrives as (1, *shape) — this shard's agent replica
+        # each leaf arrives as (B, *shape) — this shard's agent block
         return tuple(combine([permute_term(x, t) for t in topo.terms])
                      for x in leaves)
 
@@ -172,3 +262,30 @@ def make_mixer(topo: Topology, engine: str = "shifts", mesh=None,
         return functools.partial(mix_ppermute, topo, mesh, agent_axes,
                                  use_fused_kernel=use_fused_kernel)
     raise ValueError(f"unknown mixing engine: {engine}")
+
+
+def make_schedule_mixer(sched, engine: str = "shifts", mesh=None,
+                        agent_axes=None, use_fused_kernel: bool = False):
+    """Step-indexed mixer over a :class:`~repro.core.schedule.GossipSchedule`:
+    returns ``mix(tree, step=0) -> tree`` applying the schedule's round
+    ``step % period`` through the chosen engine.
+
+    Every round gets its own engine closure (its own permute plan / kernel
+    arity); a concrete ``step`` dispatches in Python, a traced one through
+    ``jax.lax.switch`` — the round index is replicated (it derives from the
+    global step), so the branch collectives stay SPMD-consistent.  Period-1
+    schedules skip the switch entirely and are bit-identical to the static
+    ``make_mixer`` path.
+    """
+    mixers = [make_mixer(r, engine, mesh=mesh, agent_axes=agent_axes,
+                         use_fused_kernel=use_fused_kernel)
+              for r in sched.rounds]
+    if sched.period == 1:
+        return lambda tree, step=0: mixers[0](tree)
+
+    def mix(tree, step=0):
+        if isinstance(step, int):
+            return mixers[step % sched.period](tree)
+        return jax.lax.switch(step % sched.period, mixers, tree)
+
+    return mix

@@ -30,7 +30,22 @@ __all__ = [
     "hierarchical",
     "disconnected",
     "spectral_stats",
+    "matrix_lam",
 ]
+
+
+def matrix_lam(W: np.ndarray) -> float:
+    """Second largest eigenvalue *modulus* of a stochastic matrix.
+
+    Unlike :meth:`Topology.lam` this does not assume symmetry — it is the λ
+    of round products of time-varying schedules (``GossipSchedule.
+    period_product``), which are asymmetric whenever any round is (the
+    one-peer exp rounds are ½I + ½R, a rotation half).
+    """
+    if W.shape[0] <= 1:
+        return 0.0
+    ev = np.sort(np.abs(np.linalg.eigvals(W)))
+    return float(ev[-2])
 
 
 @dataclasses.dataclass(frozen=True)

@@ -25,14 +25,34 @@ inside the ~16 MB VMEM budget at the default 512×128×4 B×7 buffers ≈ 1.8 MB
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["edm_update_flat", "gossip_axpy_flat", "BLOCK_ROWS", "LANE"]
 
-BLOCK_ROWS = 512
+def _env_block_rows() -> int:
+    """Grid-tile height: the knob the real-TPU tuning sweep turns.  Read
+    once at import from REPRO_BLOCK_ROWS (benchmarks/gossip_micro.py
+    --block-rows and the per-call ``block_rows=`` args override it); must
+    be a multiple of 8 for the 8×128 VPU tile."""
+    raw = os.environ.get("REPRO_BLOCK_ROWS", "")
+    if not raw:
+        return 512
+    try:
+        n = int(raw)
+    except ValueError:
+        raise ValueError(f"REPRO_BLOCK_ROWS must be an integer, got {raw!r}")
+    if n <= 0 or n % 8:
+        raise ValueError(
+            f"REPRO_BLOCK_ROWS must be a positive multiple of 8, got {n}")
+    return n
+
+
+BLOCK_ROWS = _env_block_rows()
 LANE = 128
 
 
@@ -69,30 +89,37 @@ def edm_update_flat(x, g, m, psi, *, alpha: float, beta: float,
     )(x, g, m, psi)
 
 
-def _axpy_kernel(*refs, weights):
-    # refs = (in_0, ..., in_{n-1}, out); accumulate in f32 so a bf16 gossip
-    # payload only rounds once, on the final store.
+def _axpy_kernel(w_ref, *refs):
+    # refs = (in_0, ..., in_{n-1}, out); w_ref = (1, n) weights in SMEM —
+    # runtime values, so one compiled kernel serves every weight set of one
+    # arity (time-varying schedules swap rounds without retracing).
+    # Accumulate in f32 so a bf16 gossip payload only rounds once, on the
+    # final store.
     o_ref = refs[-1]
-    acc = weights[0] * refs[0][...].astype(jnp.float32)
-    for w, r in zip(weights[1:], refs[1:-1]):
-        acc += w * r[...].astype(jnp.float32)
+    acc = w_ref[0, 0] * refs[0][...].astype(jnp.float32)
+    for k, r in enumerate(refs[1:-1], start=1):
+        acc += w_ref[0, k] * r[...].astype(jnp.float32)
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
-def gossip_axpy_flat(operands, weights, *, block_rows: int = BLOCK_ROWS,
+def gossip_axpy_flat(operands, weights, *, block_rows: int | None = None,
                      interpret: bool = False):
     """Fused n-ary gossip combine  Σₖ wₖ·operandₖ  over (rows, 128) tiles.
 
     ``operands`` are the post-permute neighbor payloads of one gossip step
-    (one per :class:`~repro.core.topology.ShiftTerm`); ``weights`` the matching
-    mixing weights.  All operands share one shape/dtype (f32 or bf16);
-    accumulation is f32, output dtype follows the operands.  The ring case of
-    the paper's experiments is the 3-ary instance (center/left/right).
+    (one per :class:`~repro.core.topology.ShiftTerm`); ``weights`` the
+    matching mixing weights — floats or a traced (n,) array; they enter the
+    kernel as an SMEM operand, so the compiled kernel is keyed on the
+    *arity* n, not the weight values.  All operands share one shape/dtype
+    (f32 or bf16); accumulation is f32, output dtype follows the operands.
+    The ring case of the paper's experiments is the 3-ary instance
+    (center/left/right).
     """
+    if block_rows is None:
+        block_rows = BLOCK_ROWS
     operands = tuple(operands)
-    weights = tuple(float(w) for w in weights)
-    assert operands and len(operands) == len(weights), (len(operands),
-                                                        len(weights))
+    w = jnp.asarray(weights, jnp.float32).reshape(1, -1)
+    assert operands and w.shape[1] == len(operands), (len(operands), w.shape)
     rows, lane = operands[0].shape
     assert lane == LANE and rows % block_rows == 0, (operands[0].shape,
                                                      block_rows)
@@ -100,10 +127,11 @@ def gossip_axpy_flat(operands, weights, *, block_rows: int = BLOCK_ROWS,
                for o in operands)
     spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_axpy_kernel, weights=weights),
+        _axpy_kernel,
         grid=(rows // block_rows,),
-        in_specs=[spec] * len(operands),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
+        + [spec] * len(operands),
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(operands[0].shape, operands[0].dtype),
         interpret=interpret,
-    )(*operands)
+    )(w, *operands)

@@ -13,7 +13,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from .edm_update import LANE, edm_update_flat, gossip_axpy_flat
+from .edm_update import BLOCK_ROWS, LANE, edm_update_flat, gossip_axpy_flat
 from .flash_attention import flash_attention_kernel_call
 
 __all__ = ["edm_update", "edm_update_tree", "gossip_axpy", "flash_attention"]
@@ -44,8 +44,14 @@ def _unpack(packed, n, shape, dtype):
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "block_rows",
                                              "interpret"))
 def edm_update(x, g, m, psi, *, alpha: float, beta: float,
-               block_rows: int = 512, interpret: bool | None = None):
-    """Array-level fused EDM update.  Any shape; returns (m', ψ', φ)."""
+               block_rows: int | None = None, interpret: bool | None = None):
+    """Array-level fused EDM update.  Any shape; returns (m', ψ', φ).
+
+    ``block_rows`` defaults to the REPRO_BLOCK_ROWS-tunable
+    :data:`~repro.kernels.edm_update.BLOCK_ROWS` (the real-TPU sweep knob).
+    """
+    if block_rows is None:
+        block_rows = BLOCK_ROWS
     if interpret is None:
         interpret = not _on_tpu()
     xp, n = _pack(x, block_rows)
@@ -74,26 +80,35 @@ def edm_update_tree(params: Any, grads: Any, m: Any, psi: Any, *,
     return m_new, phi, psi_new
 
 
-@functools.partial(jax.jit, static_argnames=("weights", "interpret"))
-def _gossip_axpy_jit(operands, weights, interpret):
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _gossip_axpy_jit(operands, weights, block_rows, interpret):
     first = operands[0]
-    packed = [_pack(o, 512, dtype=None)[0] for o in operands]
+    packed = [_pack(o, block_rows, dtype=None)[0] for o in operands]
     n = first.size
-    out = gossip_axpy_flat(packed, weights, interpret=interpret)
+    out = gossip_axpy_flat(packed, weights, block_rows=block_rows,
+                           interpret=interpret)
     return _unpack(out, n, first.shape, first.dtype)
 
 
-def gossip_axpy(operands, weights, *, interpret: bool | None = None):
+def gossip_axpy(operands, weights, *, block_rows: int | None = None,
+                interpret: bool | None = None):
     """n-ary fused gossip combine  Σₖ wₖ·operandₖ  for arbitrary-shape arrays.
 
     All operands must share one shape and dtype (f32 or bf16).  This is the
     array-level entry the ppermute mixing engine calls once per leaf after
-    its collective-permutes (DESIGN §3).
+    its collective-permutes (DESIGN §3).  ``weights`` are traced data, not
+    part of the jit key: a time-varying schedule whose rounds share an arity
+    reuses one compiled kernel across rounds (DESIGN §4), and distinct
+    arities each compile exactly once.  ``block_rows`` (default: env-tunable
+    :data:`~repro.kernels.edm_update.BLOCK_ROWS`) is the TPU tuning knob.
     """
+    if block_rows is None:
+        block_rows = BLOCK_ROWS
     if interpret is None:
         interpret = not _on_tpu()
     return _gossip_axpy_jit(tuple(operands),
-                            tuple(float(w) for w in weights), interpret)
+                            jnp.asarray(weights, jnp.float32),
+                            block_rows, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",

@@ -38,27 +38,38 @@ def make_sim_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def make_gossip_mesh(n_agents: int, pods: int = 1):
-    """Mesh whose device grid is exactly the agent grid — one agent per
-    device, as the ppermute engine requires (DESIGN §3).
+def make_gossip_mesh(n_agents: int, pods: int = 1,
+                     agents_per_device: int = 1):
+    """Mesh whose device grid carries the agent grid — a block of
+    ``agents_per_device`` agents per device, as the ppermute engine requires
+    (DESIGN §3–4).
 
-    Builds over the first ``n_agents`` devices so it also works on a
-    host-platform mesh forced larger than needed
-    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  Shape is
-    ``(pods, n_agents // pods)`` with axes ``('pod', 'data')`` for
-    hierarchical topologies, else ``(n_agents,)`` with ``('data',)``.
+    Builds over the first ``n_agents // agents_per_device`` devices so it
+    also works on a host-platform mesh forced larger than needed
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  One agent per
+    device (the default) yields ``(pods, n_agents // pods)`` with axes
+    ``('pod', 'data')`` for hierarchical topologies, else ``(n_agents,)``
+    with ``('data',)``.  Blocked mode (``agents_per_device > 1`` — how the
+    n=32 simulations run on 8-device hosts) always builds the single flat
+    ``('data',)`` axis the blocked engine needs; hierarchical terms
+    decompose inside the engine, not the mesh.
     """
     from jax.sharding import Mesh
 
+    B = agents_per_device
+    assert B >= 1 and n_agents % B == 0, (n_agents, B)
     assert n_agents % max(pods, 1) == 0, (n_agents, pods)
+    n_dev = n_agents // B
     devices = jax.devices()
-    assert len(devices) >= n_agents, \
-        f"need {n_agents} devices for one-agent-per-device gossip, " \
+    assert len(devices) >= n_dev, \
+        f"need {n_dev} devices for {B}-agent-per-device gossip, " \
         f"have {len(devices)}"
+    if B > 1:
+        return Mesh(np.array(devices[:n_dev]), ("data",))
     if pods > 1:
-        grid = np.array(devices[:n_agents]).reshape(pods, n_agents // pods)
+        grid = np.array(devices[:n_dev]).reshape(pods, n_dev // pods)
         return Mesh(grid, ("pod", "data"))
-    return Mesh(np.array(devices[:n_agents]), ("data",))
+    return Mesh(np.array(devices[:n_dev]), ("data",))
 
 
 def gossip_agent_axes(mesh):

@@ -19,7 +19,8 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.base import RunConfig
 from repro.data import SyntheticLM
 from repro.models import build_model
-from repro.train import build_train_step, checkpoint, init_state, make_topology
+from repro.train import (build_train_step, checkpoint, init_state,
+                         make_gossip_schedule)
 
 
 def main():
@@ -38,8 +39,19 @@ def main():
     ap.add_argument("--gossip-engine", default="shifts",
                     choices=["dense", "shifts", "ppermute"],
                     help="mixing engine; ppermute needs one device per agent "
-                         "(set XLA_FLAGS=--xla_force_host_platform_device_"
-                         "count=N on CPU)")
+                         "block (set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N on CPU)")
+    ap.add_argument("--gossip-schedule", default="static",
+                    choices=["static", "round_robin", "alt_hier"],
+                    help="time-varying gossip schedule (DESIGN §4): "
+                         "round_robin = one permute/step one-peer exp rounds")
+    ap.add_argument("--gossip-period", type=int, default=0,
+                    help="alt_hier: intra-pod rounds per inter-pod round")
+    ap.add_argument("--gossip-seed", type=int, default=0,
+                    help="round_robin: shuffle the offset order (0 = off)")
+    ap.add_argument("--agents-per-device", type=int, default=1,
+                    help="blocked ppermute: agents per mesh device, so "
+                         "A > device count runs without the shifts fallback")
     ap.add_argument("--fused-kernel", action="store_true",
                     help="fused Pallas EDM update + gossip combine")
     ap.add_argument("--alpha", type=float, default=0.2)
@@ -54,15 +66,26 @@ def main():
     run = RunConfig(global_batch=args.agents * args.per_agent_batch,
                     seq_len=args.seq, algorithm=args.algorithm,
                     alpha=args.alpha, beta=args.beta, topology=args.topology,
-                    gossip_engine=args.gossip_engine, remat=False)
-    topo = make_topology(run, args.agents, pods=args.pods)
+                    gossip_engine=args.gossip_engine,
+                    gossip_schedule=args.gossip_schedule,
+                    gossip_period=args.gossip_period,
+                    gossip_seed=args.gossip_seed,
+                    agents_per_device=args.agents_per_device, remat=False)
+    sched = make_gossip_schedule(run, args.agents, pods=args.pods)
     mesh = agent_axes = None
     if args.gossip_engine == "ppermute":
         from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
-        mesh = make_gossip_mesh(args.agents, pods=args.pods)
+        mesh = make_gossip_mesh(args.agents, pods=args.pods,
+                                agents_per_device=args.agents_per_device)
         agent_axes = gossip_agent_axes(mesh)
+    stats = sched.product_spectral_stats()
+    # --topology only feeds the static schedule; don't print it otherwise
+    topo_str = (f"topo={args.topology} " if args.gossip_schedule == "static"
+                else "")
     print(f"arch={cfg.name} ({cfg.n_params()/1e6:.1f}M params) "
-          f"agents={args.agents} topo={args.topology} λ={topo.lam():.4f} "
+          f"agents={args.agents} {topo_str}"
+          f"schedule={sched.name} period={sched.period} "
+          f"λ_prod={stats['lambda']:.4f} "
           f"alg={args.algorithm} engine={args.gossip_engine}"
           f"{' +fused' if args.fused_kernel else ''}")
 
@@ -80,7 +103,7 @@ def main():
         return b
 
     state = init_state(model, run, args.agents, jax.random.PRNGKey(0))
-    step = jax.jit(build_train_step(model, run, topo,
+    step = jax.jit(build_train_step(model, run, sched,
                                     use_fused_kernel=args.fused_kernel,
                                     mesh=mesh, agent_axes=agent_axes))
     key = jax.random.PRNGKey(1)

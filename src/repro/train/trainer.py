@@ -19,13 +19,16 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core import Topology, make_mixer, make_optimizer
+from repro.core import (GossipSchedule, StaticSchedule, Topology,
+                        accumulate_f32, make_mixer, make_optimizer,
+                        make_schedule, make_schedule_mixer)
 from repro.core.metrics import consensus_distance
 from repro.models.api import Model
 
 __all__ = [
     "TrainState", "build_train_step", "init_state", "state_specs",
-    "make_topology", "prepend_agent_axis", "batch_spec_tree",
+    "make_topology", "make_gossip_schedule", "gossip_round_step",
+    "prepend_agent_axis", "batch_spec_tree",
 ]
 
 
@@ -48,40 +51,77 @@ def make_topology(run: RunConfig, n_agents: int, pods: int = 1) -> Topology:
     raise ValueError(run.topology)
 
 
+def make_gossip_schedule(run: RunConfig, n_agents: int,
+                         pods: int = 1) -> GossipSchedule:
+    """``RunConfig`` → step-indexed gossip schedule (DESIGN §4).
+
+    ``gossip_schedule="static"`` wraps :func:`make_topology`'s W;
+    ``"round_robin"`` / ``"alt_hier"`` build the time-varying schedules
+    (``gossip_period``/``gossip_seed`` are their knobs).
+    """
+    topo = (make_topology(run, n_agents, pods)
+            if run.gossip_schedule in ("static", "", None) else None)
+    return make_schedule(run.gossip_schedule, n_agents, topo=topo, pods=pods,
+                         period=run.gossip_period, seed=run.gossip_seed)
+
+
+def gossip_round_step(step, gossip_every: int):
+    """Round-index clock for the gossip schedule.
+
+    With ``gossip_every=k > 1`` gossip only executes on steps ≡ k−1 (mod k);
+    indexing the schedule by the raw step would then alias against the
+    period (any gcd(k, period) > 1 runs only a strict subset of rounds —
+    e.g. k=5 on the n=32 round-robin schedule would gossip over offset 16
+    forever, never reaching consensus).  Advance the schedule per *executed
+    gossip* instead: round = (step // k) mod period cycles through every
+    round regardless of k.
+    """
+    return step // gossip_every if gossip_every > 1 else step
+
+
 def _cast_mixer(mix, dtype: Optional[str]):
-    """Optionally gossip in a lower-precision payload (§Perf lever)."""
+    """Optionally gossip in a lower-precision payload (§Perf lever);
+    ``accumulate_f32`` restores the original leaf dtypes on the way out."""
     if not dtype or dtype == "float32":
         return mix
-
-    def mixed(tree):
-        dt = jnp.dtype(dtype)
-        low = jax.tree.map(lambda x: x.astype(dt), tree)
-        out = mix(low)
-        return jax.tree.map(lambda o, x: o.astype(x.dtype), out, tree)
-
-    return mixed
+    dt = jnp.dtype(dtype)
+    return accumulate_f32(
+        lambda tree: mix(jax.tree.map(lambda x: x.astype(dt), tree)))
 
 
-def build_train_step(model: Model, run: RunConfig, topo: Topology,
+def build_train_step(model: Model, run: RunConfig, topo,
                      use_fused_kernel: bool = False, mesh=None,
                      agent_axes=None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch leaves: (A, per_agent_batch, ...).
 
+    ``topo`` is a :class:`Topology` (wrapped into a period-1
+    :class:`StaticSchedule`) or a :class:`GossipSchedule`; ``state["step"]``
+    is threaded into the mixer so step t gossips over round t mod period —
+    and because the mixer is bound per step, EDM's bias-corrected payload
+    φ = ψ' + x − ψ is mixed with the *same* round's W that defines the
+    step's combine, keeping the exact-diffusion consistency per step
+    (DESIGN §4).
+
     ``run.gossip_engine`` selects the mixing engine; the ppermute engine
-    additionally needs ``mesh``/``agent_axes`` (one agent per mesh slice,
-    see DESIGN §3) and honors ``use_fused_kernel`` for its combine, so
-    ``engine="ppermute"`` + ``use_fused_kernel=True`` composes the fused
+    additionally needs ``mesh``/``agent_axes`` (an agent block per mesh
+    slice, see DESIGN §3–4) and honors ``use_fused_kernel`` for its combine,
+    so ``engine="ppermute"`` + ``use_fused_kernel=True`` composes the fused
     gossip path with the fused EDM update end-to-end.
     """
-    mix = _cast_mixer(
-        make_mixer(topo, engine=run.gossip_engine, mesh=mesh,
-                   agent_axes=agent_axes, use_fused_kernel=use_fused_kernel),
-        run.gossip_dtype)
+    sched = topo if isinstance(topo, GossipSchedule) else StaticSchedule(topo)
+    base_mix = make_schedule_mixer(
+        sched, engine=run.gossip_engine, mesh=mesh, agent_axes=agent_axes,
+        use_fused_kernel=use_fused_kernel)
     kw = dict(use_fused_kernel=use_fused_kernel) if run.algorithm == "edm" else {}
-    opt = make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta,
-                         mix=mix, **kw)
+
+    def opt_at(step, mix_override=None):
+        """Algorithm with the mixer bound to ``step``'s gossip round."""
+        mix = mix_override if mix_override is not None else _cast_mixer(
+            functools.partial(base_mix, step=step), run.gossip_dtype)
+        return make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta,
+                              mix=mix, **kw)
 
     def agent_loss(params, batch):
         kw = {}
@@ -91,23 +131,24 @@ def build_train_step(model: Model, run: RunConfig, topo: Topology,
 
     grad_fn = jax.vmap(jax.value_and_grad(agent_loss))
 
-    schedule = None
+    lr_sched = None
     if run.warmup_steps or run.total_steps:
         from repro.optim import warmup_cosine
-        schedule = warmup_cosine(run.warmup_steps or 1,
+        lr_sched = warmup_cosine(run.warmup_steps or 1,
                                  run.total_steps or 10**9)
 
     def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
         losses, grads = grad_fn(state["params"], batch)
-        if schedule is not None:
+        if lr_sched is not None:
             from repro.optim import scale_grads
-            grads = scale_grads(grads, state["step"], schedule)
+            grads = scale_grads(grads, state["step"], lr_sched)
+        g_step = gossip_round_step(state["step"], run.gossip_every)
+        opt = opt_at(g_step)
         new_params, new_opt = opt.step(state["params"], grads, state["opt"])
         if run.gossip_every > 1:
             # local-EDM: amortize gossip over k steps — on skip steps apply the
             # same update with the identity mixer (W = I).
-            local_opt = make_optimizer(run.algorithm, alpha=run.alpha,
-                                       beta=run.beta, mix=lambda t: t)
+            local_opt = opt_at(g_step, mix_override=lambda t: t)
             lp, lo = local_opt.step(state["params"], grads, state["opt"])
             do_gossip = (state["step"] % run.gossip_every) == run.gossip_every - 1
             new_params = jax.tree.map(
