@@ -13,16 +13,24 @@ Three parts:
   fused-combine ppermute engine must come in at ≤ the shifts engine;
 * an engine × *schedule* sweep (``--schedule``, DESIGN §4) reporting
   per-step wall time AND per-step wire bytes (the model from
-  ``repro.core.schedule.wire_bytes_per_step``) for the static exp graph vs
-  the one-peer round-robin schedule vs alternating hierarchical — including
-  the blocked A=32-on-8-devices ppermute case.  Results land in
-  ``BENCH_gossip.json`` at the repo root (the bench trajectory artifact CI
-  uploads).
+  ``repro.core.schedule.wire_bytes_per_step``, now in both logical and
+  ``_pack``-padded flavors — the padded column is what a packed payload
+  actually ships) for the static exp graph vs the one-peer round-robin
+  schedule vs alternating hierarchical — including the blocked
+  A=32-on-8-devices ppermute case.  Results land in ``BENCH_gossip.json``
+  at the repo root (the bench trajectory artifact CI uploads);
+* an end-to-end EDM *step* sweep (``--e2e-step``, DESIGN §5): leaf-wise vs
+  bus-resident full EDM steps (per-agent grads synthesized) across model
+  sizes, reporting us/step, permutes/step, kernel launches/step and
+  modeled HBM bytes padded vs logical for both paths, plus a numerical
+  equivalence gate (bus vs leaf-wise on a smoke transformer — nonzero exit
+  on divergence, the CI contract).  Results land in ``BENCH_edm_step.json``.
 
 CLI::
 
     python -m benchmarks.gossip_micro --schedule round_robin --steps 8
     python -m benchmarks.gossip_micro --schedule all --block-rows 256
+    python -m benchmarks.gossip_micro --e2e-step
 """
 from __future__ import annotations
 
@@ -36,8 +44,10 @@ import jax
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(REPO, "BENCH_gossip.json")
+BENCH_EDM_JSON = os.path.join(REPO, "BENCH_edm_step.json")
 _SWEEP_MARKER = "SWEEP_CSV_JSON:"
 _SCHED_MARKER = "SCHED_JSON:"
+_E2E_MARKER = "E2E_JSON:"
 
 
 def _sweep_cases():
@@ -152,6 +162,20 @@ def schedule_sweep(which: str = "all", steps: int = 8, d: int = 1 << 16,
                                            agents_per_device=apd,
                                            engine=c["engine"])
                        for t in range(steps)) / steps
+            # pad-waste accounting: the wire ships *logical* payloads (the
+            # permutes run on raw leaves), but the fused combine kernel
+            # streams each per-device shard padded to whole
+            # (BLOCK_ROWS, 128) grid tiles by kernels/ops._pack — the
+            # padded column is the combine's true HBM traffic, which the
+            # logical model undercounts for any d not tile-aligned.
+            from repro.kernels.ops import padded_size
+            n_dev = A // apd
+            n_streams = sum(len(sched.round(t).terms) + 1
+                            for t in range(steps)) / steps
+            combine_logical = int(n_streams * A * d * 4)
+            combine_padded = (int(n_streams * n_dev
+                                  * padded_size(apd * d, BLOCK_ROWS) * 4)
+                              if c.get("fused") else combine_logical)
             results.append({
                 "schedule": sname, "config": cname, "engine": c["engine"],
                 "agents": A, "agents_per_device": apd, "d": d,
@@ -159,11 +183,227 @@ def schedule_sweep(which: str = "all", steps: int = 8, d: int = 1 << 16,
                 "block_rows": BLOCK_ROWS,
                 "us_per_step": round(us, 1),
                 "wire_bytes_per_step": int(wire),
+                "combine_hbm_bytes_per_step": combine_logical,
+                "combine_hbm_bytes_padded_per_step": combine_padded,
                 "permutes_per_step": max(
                     sum(1 for t in rnd.terms if t.shift != 0)
                     for rnd in sched.rounds),
             })
     return results
+
+
+# ---------------------------------------------------------------------------
+# end-to-end EDM step: leaf-wise vs bus-resident (DESIGN §5)
+# ---------------------------------------------------------------------------
+
+# model size per benchmarked config (dense family): depth scales the
+# parameter set at fixed width, isolating the per-leaf launch/permute
+# overhead the bus amortizes from width-bound grad compute.  This repo's
+# models stack layers into scanned leaves, so the leaf count stays
+# moderate (L=12) and the measured delta is a LOWER bound on what an
+# unstacked ~100-leaf tree gains from the bus.
+E2E_SIZES = {
+    "small": dict(n_layers=2, d_model=64, d_ff=128),
+    "medium": dict(n_layers=6, d_model=64, d_ff=128),
+    "large": dict(n_layers=12, d_model=64, d_ff=128),
+}
+
+
+def e2e_step_sweep(iters: int = 6) -> List[dict]:
+    """Leaf-wise vs bus-resident **full train step** (fwd + bwd + EDM update
+    + gossip; ppermute engine, n=8 ring) across model sizes.
+
+    Wall-clock times the integrated jitted ``build_train_step`` of each
+    path (the per-step ``unpack``/``pack`` the bus pays for loss/grad is
+    inside the timed region; the grad computation is identical in both, so
+    the delta is the update+gossip machinery).  The unfused update chains
+    are timed — interpret-mode Pallas is not representative on CPU — while
+    the modeled columns carry what matters on TPU: permutes/step, kernel
+    launches/step, and fused-path HBM bytes **padded** (what the kernels
+    actually stream after ``_pack`` pad-to-grid) vs **logical** (data
+    bytes).  The bus pays one tail pad for the whole tree; the leaf-wise
+    path pads every leaf to a whole (BLOCK_ROWS, 128) tile.
+
+    Also runs the numerical equivalence gates (bus == leaf-wise losses on
+    every size, fused == unfused on the bus) — any divergence raises,
+    which is the CI contract.
+
+    Needs 8 host devices (use the ``--e2e-step`` outer flag for the
+    subprocess wrapper).
+    """
+    import time
+
+    import numpy as np
+
+    from repro.configs.base import ModelConfig, RunConfig
+    from repro.core import bus as parambus, make_edm_bus, ring
+    from repro.data import SyntheticLM
+    from repro.kernels.edm_update import BLOCK_ROWS
+    from repro.kernels.ops import padded_size
+    from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
+    from repro.models import build_model
+    from repro.train import (build_train_step, bus_layout_for, init_state,
+                             make_gossip_schedule)
+
+    A = 8
+    topo = ring(A)
+    mesh = make_gossip_mesh(A)
+    axes = gossip_agent_axes(mesh)
+    n_terms = len(topo.terms)
+    n_perm = sum(1 for t in topo.terms if t.shift != 0)
+
+    results = []
+    for size, dims in E2E_SIZES.items():
+        cfg = ModelConfig(name=f"bus-e2e-{size}", family="dense",
+                          n_heads=2, n_kv_heads=2, vocab_size=256,
+                          dtype="float32", **dims)
+        model = build_model(cfg)
+        batch = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16,
+                            n_agents=A).sample(jax.random.PRNGKey(1), 1)
+        layout = bus_layout_for(model, A)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        leaf_elems = [int(np.prod(s.shape)) for s in jax.tree.leaves(shapes)]
+        L = len(leaf_elems)
+        n_logical = sum(leaf_elems)
+
+        us = {}
+        losses = {}
+        for packed in (False, True):
+            run = RunConfig(global_batch=A, seq_len=16, algorithm="edm",
+                            alpha=0.2, gossip_engine="ppermute",
+                            packed_bus=packed, remat=False)
+            sched = make_gossip_schedule(run, A)
+            state = init_state(model, run, A, jax.random.PRNGKey(0))
+            step = jax.jit(build_train_step(model, run, sched, mesh=mesh,
+                                            agent_axes=axes),
+                           donate_argnums=(0,) if packed else ())
+            state, m = step(state, batch)  # compile
+            traj = [float(m["loss"])]
+            jax.block_until_ready(m["loss"])
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                state, m = step(state, batch)
+            jax.block_until_ready(m["loss"])
+            us[packed] = (time.perf_counter() - t0) / iters * 1e6
+            traj.append(float(m["loss"]))
+            losses[packed] = traj
+        # equivalence gate: identical data + init ⇒ identical losses up to
+        # f32 reassociation drift over the iters-step trajectory (the two
+        # paths reduce in different orders; tests/test_bus.py pins 3 steps
+        # at 1e-5 — a real divergence, e.g. the naive-bf16 bias, is ~1e-2+)
+        np.testing.assert_allclose(
+            losses[True], losses[False], rtol=1e-4, atol=1e-5,
+            err_msg=f"bus vs leaf-wise losses diverged at size={size}")
+
+        # fused-path HBM model (f32): the EDM update streams 7 buffers of
+        # the full per-agent set, the n-ary combine n_terms + 1 — padded to
+        # _pack's grid tiles per launch (per leaf, or once for the bus).
+        streams = 7 + n_terms + 1
+        hbm_logical = streams * A * n_logical * 4
+        leaf_padded = (7 * sum(padded_size(A * n, BLOCK_ROWS)
+                               for n in leaf_elems)
+                       + (n_terms + 1) * A * sum(padded_size(n, BLOCK_ROWS)
+                                                 for n in leaf_elems)) * 4
+        bus_padded = streams * A * layout.padded_elems * 4
+        common = {"size": size, "n_leaves": L, "agents": A,
+                  "elems_per_agent": n_logical,
+                  "block_rows": layout.block_rows,
+                  "wire_bytes_logical": n_perm * A * n_logical * 4}
+        results.append({**common, "path": "leafwise",
+                        "us_per_step": round(us[False], 1),
+                        "permutes_per_step": L * n_perm,
+                        "kernel_launches_per_step": 2 * L,
+                        "hbm_bytes_logical": hbm_logical,
+                        "hbm_bytes_padded": leaf_padded,
+                        "wire_bytes_padded": n_perm * A * n_logical * 4})
+        results.append({**common, "path": "bus",
+                        "us_per_step": round(us[True], 1),
+                        "permutes_per_step": n_perm,
+                        "kernel_launches_per_step": 2,
+                        "hbm_bytes_logical": hbm_logical,
+                        "hbm_bytes_padded": bus_padded,
+                        "wire_bytes_padded":
+                            n_perm * A * layout.padded_elems * 4,
+                        "speedup_vs_leafwise":
+                            round(us[False] / us[True], 2)})
+
+        # gate 2 (smallest size only): fused bus kernel == unfused bus at
+        # the optimizer level.
+        if size == "small":
+            import jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.core import make_mixer
+            mix = make_mixer(topo, "ppermute", mesh=mesh, agent_axes=axes)
+            params1 = model.init(jax.random.PRNGKey(0))
+            params = jax.device_put(
+                jax.tree.map(
+                    lambda l: jnp.broadcast_to(l[None], (A,) + l.shape),
+                    params1),
+                NamedSharding(mesh, P("data")))
+            xb = parambus.pack_tree(layout, params)
+            gb = parambus.pack_tree(
+                layout, jax.tree.map(lambda x: 0.1 * x, params))
+            o_un = make_edm_bus(0.05, 0.9, mix,
+                                block_rows=layout.block_rows)
+            o_fu = make_edm_bus(0.05, 0.9, mix,
+                                block_rows=layout.block_rows,
+                                use_fused_kernel=True)
+            stb = o_un.init(xb)
+            x_un, _ = o_un.step(xb, gb, stb)
+            x_fu, _ = o_fu.step(xb, gb, stb)
+            np.testing.assert_allclose(
+                np.asarray(x_fu), np.asarray(x_un), rtol=1e-5, atol=1e-5,
+                err_msg="fused bus kernel vs unfused bus diverged")
+    return results
+
+
+def _e2e_subprocess(iters: int = 6) -> List[dict]:
+    """Run :func:`e2e_step_sweep` under an 8-device host platform."""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": os.path.join(REPO, "src")
+           + (os.pathsep + os.environ["PYTHONPATH"]
+              if os.environ.get("PYTHONPATH") else "")}
+    r = subprocess.run([sys.executable, "-m", "benchmarks.gossip_micro",
+                        "--e2e-inner", "--iters", str(iters)],
+                       cwd=REPO, env=env, capture_output=True, text=True,
+                       timeout=900)
+    for line in r.stdout.splitlines():
+        if line.startswith(_E2E_MARKER):
+            return json.loads(line[len(_E2E_MARKER):])
+    raise RuntimeError(f"e2e step sweep failed:\n{r.stdout[-2000:]}"
+                       f"\n{r.stderr[-2000:]}")
+
+
+def write_edm_bench_json(results: List[dict]) -> str:
+    """Persist the e2e EDM step sweep to BENCH_edm_step.json."""
+    payload = {
+        "bench": "edm_step_leafwise_vs_bus",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    with open(BENCH_EDM_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return BENCH_EDM_JSON
+
+
+def _e2e_csv_rows(rows: List[dict]) -> List[str]:
+    from .common import csv_row
+    out = []
+    for row in rows:
+        if row.get("path") == "equivalence":
+            continue
+        extra = (f";speedup={row['speedup_vs_leafwise']}x"
+                 if "speedup_vs_leafwise" in row else "")
+        out.append(csv_row(
+            f"edm_step/{row['size']}/{row['path']}", row["us_per_step"],
+            f"L={row['n_leaves']};permutes={row['permutes_per_step']};"
+            f"launches={row['kernel_launches_per_step']};"
+            f"hbm_padded={row['hbm_bytes_padded']}{extra}"))
+    return out
 
 
 def _schedule_subprocess(which: str, steps: int,
@@ -308,10 +548,24 @@ def _cli() -> None:
     ap.add_argument("--block-rows", type=int, default=0,
                     help="Pallas BLOCK_ROWS override for the fused combine "
                          "(0 = REPRO_BLOCK_ROWS / default)")
+    ap.add_argument("--e2e-step", action="store_true",
+                    help="leaf-wise vs bus-resident EDM step sweep "
+                         "(in an 8-device subprocess) + equivalence gates; "
+                         "writes BENCH_edm_step.json")
+    ap.add_argument("--e2e-inner", action="store_true",
+                    help="(inner) e2e step sweep; needs 8 devices")
+    ap.add_argument("--iters", type=int, default=6,
+                    help="timing iterations per e2e config")
     args = ap.parse_args()
 
     if args.sweep:
         print(_SWEEP_MARKER + json.dumps(sweep()))
+    elif args.e2e_inner:
+        print(_E2E_MARKER + json.dumps(e2e_step_sweep(iters=args.iters)))
+    elif args.e2e_step:
+        rows = _e2e_subprocess(iters=args.iters)
+        print("\n".join(_e2e_csv_rows(rows)))
+        print(f"wrote {write_edm_bench_json(rows)}")
     elif args.schedule_inner:
         print(_SCHED_MARKER + json.dumps(schedule_sweep(
             args.schedule_inner, steps=args.steps,

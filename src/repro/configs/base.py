@@ -171,6 +171,11 @@ class RunConfig:
     gossip_period: int = 0           # alt_hier: intra rounds per inter (0→1)
     gossip_seed: int = 0             # round_robin: offset-order shuffle (0=off)
     agents_per_device: int = 1       # blocked ppermute: A > device count (§4)
+    # packed parameter bus (DESIGN §5): params + EDM state live in one
+    # (A, rows, 128) superbuffer — one edm_update pallas_call and one
+    # ppermute per gossip term per step.  None = auto: on for the
+    # algorithm="edm" + gossip_engine="ppermute" production path.
+    packed_bus: Optional[bool] = None
     gossip_dtype: str = "float32"    # bf16 payload is a §Perf lever
     gossip_every: int = 1            # gossip every k steps (local-EDM, §Perf)
     moe_sharding: bool = False       # explicit MoE dispatch constraints (§Perf)

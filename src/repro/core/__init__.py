@@ -11,5 +11,11 @@ from .schedule import (  # noqa: F401
     GossipSchedule, StaticSchedule, RoundRobinExp, AlternatingHierarchical,
     make_schedule, wire_bytes_per_step,
 )
-from .optimizers import DecOptimizer, make_optimizer, ALGORITHMS  # noqa: F401
+from .optimizers import (  # noqa: F401
+    DecOptimizer, make_optimizer, make_edm_bus, ALGORITHMS,
+)
+from .bus import (  # noqa: F401
+    BusLayout, LeafSlot, make_layout, layout_of, pack_tree, unpack_tree,
+    leaf_views,
+)
 from . import metrics  # noqa: F401

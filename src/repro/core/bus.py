@@ -1,0 +1,222 @@
+"""ParamBus: packed flat-buffer layout for the per-agent parameter set.
+
+The EDM hot loop (DESIGN §5) is launch- and memory-bound when run *per
+leaf*: a ~100-leaf transformer pays ~100 Pallas launches per fused update,
+~100 `ppermute`s per gossip term, and per-leaf pad-to-tile waste.  The bus
+packs the full per-agent pytree — params, grads, m, ψ — into ONE
+``(A, rows, 128)`` superbuffer under a **static layout**, so the whole EDM
+step runs bus-resident:
+
+* one ``edm_update`` pallas_call over the entire bus (one grid);
+* one ``ppermute`` per gossip term and one n-ary ``gossip_axpy`` combine
+  per step (the mixing engines already operate leaf-wise over pytrees with
+  a leading agent axis — a bus is simply a one-leaf tree);
+* ``m``/``ψ`` stay in bus layout across steps (pack once at ``init_state``,
+  unpack only for loss/grad and checkpointing).
+
+Layout contract (DESIGN §5):
+
+* lane width is fixed at 128 (:data:`~repro.kernels.edm_update.LANE`);
+  every leaf's flattened elements start at an 8-row (8×128-element)
+  boundary, so each leaf slot is independently VPU-tile-aligned;
+* the buffer's total row count is rounded up to a multiple of
+  ``block_rows`` (default: the REPRO_BLOCK_ROWS-tunable kernel tile) —
+  the single tail pad region; all pad elements are zero and stay zero
+  under the EDM update and any doubly-stochastic mix (both map 0 → 0),
+  so the pad never contaminates logical values;
+* dtype policy: the bus carries one storage dtype (default f32); leaves
+  are cast on pack and restored to their recorded dtype on unpack.  Any
+  sub-f32 leaf (bf16/f16) round-trips losslessly through an f32 bus; a
+  bf16 bus is the lossy wire-compression configuration and is only exact
+  for bf16 leaves.
+
+Layouts are static Python objects (hashable, cached) — ``pack_tree`` /
+``unpack_tree`` are pure jnp reshuffles, safe to trace under jit, and a
+jitted step that closes over a layout never retraces on weight values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LANE", "BusLayout", "LeafSlot", "make_layout", "layout_of",
+           "pack_tree", "unpack_tree", "leaf_views", "padded_rows"]
+
+LANE = 128  # must match repro.kernels.edm_update.LANE
+_SUBLANE = 8  # 8×128 VPU tile: every leaf slot starts on an 8-row boundary
+
+
+def padded_rows(n_elems: int, align: int = _SUBLANE) -> int:
+    """Rows of 128 lanes holding ``n_elems``, rounded up to ``align`` rows."""
+    rows = -(-n_elems // LANE)
+    return -(-rows // align) * align
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Static placement of one pytree leaf inside the bus.
+
+    ``shape``/``dtype`` are the *per-agent* logical leaf (agent axis
+    stripped); the leaf occupies rows ``[row, row + rows)`` of the bus,
+    elements ``[row·128, row·128 + size)`` of the flattened view.
+    """
+
+    row: int
+    rows: int
+    shape: Tuple[int, ...]
+    dtype: Any
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BusLayout:
+    """Static bus layout: where every leaf of the packed tree lives.
+
+    Built from an example tree whose leaves carry a leading agent axis
+    ``(A, *shape)``; the layout itself is agent-count-agnostic (``A`` is
+    whatever ``pack_tree`` receives), which is why one cached layout backs
+    init, the train step and checkpoint restore alike.
+    """
+
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+    rows: int                  # total rows incl. tail pad; % block_rows == 0
+    block_rows: int
+    dtype: Any                 # bus storage dtype (f32 default)
+
+    @property
+    def logical_elems(self) -> int:
+        """Elements that carry data (excludes alignment + tail pad)."""
+        return sum(s.size for s in self.slots)
+
+    @property
+    def padded_elems(self) -> int:
+        """Total bus elements per agent (rows × 128) — what one permute of
+        the bus actually ships, and what one kernel pass streams."""
+        return self.rows * LANE
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of the bus that is alignment/tail padding."""
+        return 1.0 - self.logical_elems / max(self.padded_elems, 1)
+
+
+def _leaf_signature(tree: Any) -> tuple:
+    # per-agent signature: the leading agent axis is stripped, so trees
+    # differing only in A hit the same cached layout
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef, tuple((tuple(l.shape[1:]), jnp.dtype(l.dtype).name)
+                           for l in flat))
+
+
+_LAYOUT_CACHE: dict = {}
+
+
+def make_layout(tree: Any, *, block_rows: int | None = None,
+                dtype: Any = jnp.float32) -> BusLayout:
+    """Build (or fetch from cache) the bus layout for ``tree``.
+
+    ``tree`` leaves must be floating arrays (or ShapeDtypeStructs) of shape
+    ``(A, *leaf_shape)`` — the leading agent axis is stripped; two trees
+    differing only in ``A`` share one layout.  ``block_rows`` defaults to
+    the kernel's :data:`~repro.kernels.edm_update.BLOCK_ROWS` so the packed
+    buffer is directly griddable by ``edm_update_flat``.
+    """
+    from repro.kernels.edm_update import BLOCK_ROWS, LANE as _KERNEL_LANE
+    assert _KERNEL_LANE == LANE, (
+        "bus layout lane width drifted from the kernel grid", LANE,
+        _KERNEL_LANE)
+    if block_rows is None:
+        block_rows = BLOCK_ROWS
+    assert block_rows > 0 and block_rows % _SUBLANE == 0, block_rows
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    assert flat, "cannot build a bus layout for an empty tree"
+    key = (_leaf_signature(tree), block_rows, jnp.dtype(dtype).name)
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    slots: List[LeafSlot] = []
+    row = 0
+    for leaf in flat:
+        assert leaf.ndim >= 1, "bus leaves need a leading agent axis"
+        assert jnp.issubdtype(leaf.dtype, jnp.floating), \
+            f"bus packs floating leaves only, got {leaf.dtype}"
+        shape = tuple(leaf.shape[1:])
+        size = 1
+        for s in shape:
+            size *= s
+        rows = padded_rows(size)
+        slots.append(LeafSlot(row, rows, shape, jnp.dtype(leaf.dtype), size))
+        row += rows
+    total = -(-row // block_rows) * block_rows if row else block_rows
+    layout = BusLayout(treedef, tuple(slots), total, block_rows,
+                       jnp.dtype(dtype))
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+def layout_of(model, n_agents: int, *, block_rows: int | None = None,
+              dtype: Any = jnp.float32) -> BusLayout:
+    """Layout for a :class:`~repro.models.api.Model`'s parameter tree with
+    a leading agent axis — shape-only (``jax.eval_shape``), no allocation."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    lifted = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_agents,) + tuple(s.shape), s.dtype),
+        shapes)
+    return make_layout(lifted, block_rows=block_rows, dtype=dtype)
+
+
+def pack_tree(layout: BusLayout, tree: Any) -> jax.Array:
+    """Pack ``tree`` (leaves ``(A, *shape)``) into one ``(A, rows, 128)``
+    buffer in bus dtype.  Pure jnp; pad elements are zero."""
+    flat = layout.treedef.flatten_up_to(tree)
+    assert len(flat) == len(layout.slots)
+    A = flat[0].shape[0]
+    parts = []
+    for leaf, slot in zip(flat, layout.slots):
+        assert leaf.shape == (A,) + slot.shape, (leaf.shape, A, slot.shape)
+        seg = leaf.reshape(A, slot.size).astype(layout.dtype)
+        pad = slot.rows * LANE - slot.size
+        if pad:
+            seg = jnp.pad(seg, ((0, 0), (0, pad)))
+        parts.append(seg)
+    tail = layout.rows * LANE - sum(s.rows for s in layout.slots) * LANE
+    if tail:
+        parts.append(jnp.zeros((A, tail), layout.dtype))
+    return jnp.concatenate(parts, axis=1).reshape(A, layout.rows, LANE)
+
+
+def _slot_views(layout: BusLayout, bus: jax.Array):
+    """Flat per-slot ``(A, *leaf_shape)`` views of the bus (bus dtype) —
+    the single slicing loop behind :func:`unpack_tree` and
+    :func:`leaf_views`."""
+    A, rows, lane = bus.shape
+    assert rows == layout.rows and lane == LANE, (bus.shape, layout.rows)
+    flat_view = bus.reshape(A, rows * LANE)
+    out = []
+    for slot in layout.slots:
+        start = slot.row * LANE
+        seg = jax.lax.slice_in_dim(flat_view, start, start + slot.size,
+                                   axis=1)
+        out.append(seg.reshape((A,) + slot.shape))
+    return out
+
+
+def unpack_tree(layout: BusLayout, bus: jax.Array) -> Any:
+    """Inverse of :func:`pack_tree`: restore the logical pytree (per-leaf
+    shapes and dtypes) from an ``(A, rows, 128)`` bus buffer."""
+    leaves = [v.astype(slot.dtype)
+              for v, slot in zip(_slot_views(layout, bus), layout.slots)]
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def leaf_views(layout: BusLayout, bus: jax.Array) -> Any:
+    """Per-leaf *bus-dtype* views of the packed buffer, as a pytree matching
+    the layout's structure: each view is ``(A, *leaf_shape)`` in the bus
+    storage dtype (no cast back — useful for in-layout diagnostics like
+    per-leaf norms without a full unpack)."""
+    return jax.tree_util.tree_unflatten(layout.treedef,
+                                        _slot_views(layout, bus))

@@ -22,7 +22,11 @@ schedules hand the engines a different round per step through
 :func:`make_schedule_mixer` (DESIGN §4).
 
 All engines operate leaf-wise on arbitrary pytrees whose leaves have leading
-dim ``A = n_agents``.
+dim ``A = n_agents``.  The packed parameter bus (DESIGN §5) exploits exactly
+this: an ``(A, rows, 128)`` superbuffer is a one-leaf tree, so the ppermute
+engine ships ONE payload per gossip term for the whole parameter set
+(L·T permutes → T) and the fused combine runs once — no engine changes,
+the leaf-count factor just disappears from the wire schedule.
 """
 from __future__ import annotations
 

@@ -37,7 +37,7 @@ Grads = Any
 State = Dict[str, Any]
 Mixer = Callable[[Any], Any]
 
-__all__ = ["DecOptimizer", "make_optimizer", "ALGORITHMS"]
+__all__ = ["DecOptimizer", "make_optimizer", "make_edm_bus", "ALGORITHMS"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +107,47 @@ def make_edm(alpha: float, beta: float, mix: Mixer,
         return new_params, {"m": m_new, "psi": psi_new}
 
     return DecOptimizer("edm", init, step)
+
+
+def make_edm_bus(alpha: float, beta: float, mix: Mixer, *,
+                 block_rows: int | None = None,
+                 use_fused_kernel: bool = False) -> DecOptimizer:
+    """Bus-resident EDM (DESIGN §5): same Algorithm 1 recursion as
+    :func:`make_edm`, but every state tensor is ONE packed ``(A, rows, 128)``
+    superbuffer (:mod:`repro.core.bus`) instead of a pytree of leaves.
+
+    The whole step is then launch-minimal: one fused ``edm_update``
+    pallas_call over the entire bus (``use_fused_kernel=True``; the unfused
+    path is one XLA elementwise fusion), and — because the mixing engines
+    treat the bus as a one-leaf tree — one ``ppermute`` per gossip term and
+    one n-ary combine for the gossip, vs per-leaf launches everywhere in the
+    tree-resident path.  ``init``/``step`` consume and produce bus buffers;
+    packing/unpacking is the caller's job (``train/trainer.py`` packs once
+    at ``init_state`` and unpacks only for loss/grad and checkpointing).
+
+    Zero-preservation keeps the layout's pad region inert: m, ψ and φ are 0
+    wherever x, g and ψ start 0, and every doubly-stochastic W maps 0 → 0,
+    so pad bytes never leak into logical values.
+    """
+
+    def init(x_bus) -> State:
+        # ψ(0) = x(0) as a *distinct* buffer: the donated train step aliases
+        # params and psi independently, so they must not share storage.
+        return {"m": jnp.zeros_like(x_bus), "psi": jnp.copy(x_bus)}
+
+    def step(x_bus, g_bus, state: State):
+        if use_fused_kernel:
+            from repro.kernels import ops as kops
+            m_new, psi_new, phi = kops.edm_update_bus(
+                x_bus, g_bus, state["m"], state["psi"],
+                alpha=alpha, beta=beta, block_rows=block_rows)
+        else:
+            m_new = beta * state["m"] + (1.0 - beta) * g_bus
+            psi_new = x_bus - alpha * m_new
+            phi = psi_new + x_bus - state["psi"]
+        return mix(phi), {"m": m_new, "psi": psi_new}
+
+    return DecOptimizer("edm_bus", init, step)
 
 
 def make_ed(alpha: float, mix: Mixer, **_) -> DecOptimizer:

@@ -21,6 +21,13 @@ bf16 payload path that accumulates in f32.
 Layout: parameters are flattened and tiled to (rows, 128) f32; one grid step
 processes a (BLOCK_ROWS, 128) tile — 8×128-aligned for the VPU, comfortably
 inside the ~16 MB VMEM budget at the default 512×128×4 B×7 buffers ≈ 1.8 MB.
+
+Two callers feed these kernels (kernels/ops.py): the per-leaf wrappers
+(``edm_update`` / ``gossip_axpy``) pack each pytree leaf independently —
+one pallas_call and one pad-to-grid per leaf — while the packed parameter
+bus (``repro.core.bus``, DESIGN §5) presents the whole per-agent tree as a
+single pre-aligned (rows, 128) buffer, so ``edm_update_bus`` runs the grid
+exactly once per train step regardless of leaf count.
 """
 from __future__ import annotations
 

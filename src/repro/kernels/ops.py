@@ -16,11 +16,24 @@ import jax.numpy as jnp
 from .edm_update import BLOCK_ROWS, LANE, edm_update_flat, gossip_axpy_flat
 from .flash_attention import flash_attention_kernel_call
 
-__all__ = ["edm_update", "edm_update_tree", "gossip_axpy", "flash_attention"]
+__all__ = ["edm_update", "edm_update_tree", "edm_update_bus", "gossip_axpy",
+           "flash_attention", "padded_size"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def padded_size(n: int, block_rows: int | None = None) -> int:
+    """Elements ``_pack`` actually streams for an ``n``-element array: padded
+    up to a whole number of (block_rows, 128) grid tiles.  This is the
+    per-leaf pad waste the packed bus amortizes (DESIGN §5) and the number
+    the benchmarks' modeled-bytes columns must use — modeling with the
+    logical ``n`` undercounts kernel HBM traffic per leaf."""
+    if block_rows is None:
+        block_rows = BLOCK_ROWS
+    tile = block_rows * LANE
+    return -(-n // tile) * tile
 
 
 def _pack(leaf, block_rows, dtype=jnp.float32):
@@ -30,8 +43,7 @@ def _pack(leaf, block_rows, dtype=jnp.float32):
     if dtype is not None:
         flat = flat.astype(dtype)
     n = flat.size
-    tile = block_rows * LANE
-    pad = (-n) % tile
+    pad = padded_size(n, block_rows) - n
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     return flat.reshape(-1, LANE), n
@@ -63,6 +75,31 @@ def edm_update(x, g, m, psi, *, alpha: float, beta: float,
     return (_unpack(m2, n, x.shape, m.dtype),
             _unpack(psi2, n, x.shape, psi.dtype),
             _unpack(phi, n, x.shape, x.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "block_rows",
+                                             "interpret"))
+def edm_update_bus(x, g, m, psi, *, alpha: float, beta: float,
+                   block_rows: int | None = None,
+                   interpret: bool | None = None):
+    """Bus-resident fused EDM update: ONE ``pallas_call`` over the whole
+    ``(A, rows, 128)`` superbuffer (DESIGN §5), vs one per leaf for
+    :func:`edm_update_tree`.  The bus layout already pads ``rows`` to a
+    multiple of ``block_rows`` and aligns every leaf to the 8×128 tile, so
+    no packing happens here — the buffers are griddable as-is.
+    Returns ``(m', ψ', φ)`` in bus layout."""
+    if block_rows is None:
+        block_rows = BLOCK_ROWS
+    if interpret is None:
+        interpret = not _on_tpu()
+    A, rows, lane = x.shape
+    assert lane == LANE and (A * rows) % block_rows == 0, (x.shape, block_rows)
+    flat = lambda b: b.reshape(A * rows, LANE)
+    m2, psi2, phi = edm_update_flat(flat(x), flat(g), flat(m), flat(psi),
+                                    alpha=alpha, beta=beta,
+                                    block_rows=block_rows,
+                                    interpret=interpret)
+    return (m2.reshape(x.shape), psi2.reshape(x.shape), phi.reshape(x.shape))
 
 
 def edm_update_tree(params: Any, grads: Any, m: Any, psi: Any, *,

@@ -19,8 +19,8 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.base import RunConfig
 from repro.data import SyntheticLM
 from repro.models import build_model
-from repro.train import (build_train_step, checkpoint, init_state,
-                         make_gossip_schedule)
+from repro.train import (build_train_step, bus_layout_for, checkpoint,
+                         init_state, make_gossip_schedule, use_packed_bus)
 
 
 def main():
@@ -54,6 +54,12 @@ def main():
                          "A > device count runs without the shifts fallback")
     ap.add_argument("--fused-kernel", action="store_true",
                     help="fused Pallas EDM update + gossip combine")
+    ap.add_argument("--packed-bus", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="packed parameter bus (DESIGN §5): params + EDM "
+                         "state in one (A, rows, 128) superbuffer — one "
+                         "edm_update launch and one ppermute per gossip "
+                         "term per step.  Default: on for edm + ppermute")
     ap.add_argument("--alpha", type=float, default=0.2)
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--phi", type=float, default=0.2,
@@ -70,7 +76,8 @@ def main():
                     gossip_schedule=args.gossip_schedule,
                     gossip_period=args.gossip_period,
                     gossip_seed=args.gossip_seed,
-                    agents_per_device=args.agents_per_device, remat=False)
+                    agents_per_device=args.agents_per_device,
+                    packed_bus=args.packed_bus, remat=False)
     sched = make_gossip_schedule(run, args.agents, pods=args.pods)
     mesh = agent_axes = None
     if args.gossip_engine == "ppermute":
@@ -87,7 +94,8 @@ def main():
           f"schedule={sched.name} period={sched.period} "
           f"λ_prod={stats['lambda']:.4f} "
           f"alg={args.algorithm} engine={args.gossip_engine}"
-          f"{' +fused' if args.fused_kernel else ''}")
+          f"{' +fused' if args.fused_kernel else ''}"
+          f"{' +bus' if use_packed_bus(run) else ''}")
 
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        n_agents=args.agents, phi=args.phi)
@@ -103,9 +111,13 @@ def main():
         return b
 
     state = init_state(model, run, args.agents, jax.random.PRNGKey(0))
+    # bus-resident state: donate so XLA aliases the superbuffers in place
+    # (params/m/psi update without a second HBM copy, DESIGN §5)
+    donate = (0,) if use_packed_bus(run) else ()
     step = jax.jit(build_train_step(model, run, sched,
                                     use_fused_kernel=args.fused_kernel,
-                                    mesh=mesh, agent_axes=agent_axes))
+                                    mesh=mesh, agent_axes=agent_axes),
+                   donate_argnums=donate)
     key = jax.random.PRNGKey(1)
     t0 = time.time()
     for t in range(args.steps):
@@ -116,7 +128,9 @@ def main():
                   f"consensus={float(m['consensus']):.2e} "
                   f"({time.time()-t0:.1f}s)", flush=True)
     if args.ckpt:
-        checkpoint.save(args.ckpt, state["params"])
+        layout = (bus_layout_for(model, args.agents)
+                  if use_packed_bus(run) else None)
+        checkpoint.save(args.ckpt, state["params"], layout=layout)
         print(f"checkpoint -> {args.ckpt}")
 
 

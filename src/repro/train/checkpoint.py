@@ -1,8 +1,16 @@
-"""Minimal dependency-free checkpointing: pytree ↔ .npz with path keys."""
+"""Minimal dependency-free checkpointing: pytree ↔ .npz with path keys.
+
+Checkpoint format note (DESIGN §5): checkpoints always store the **logical**
+parameter tree — per-leaf arrays under path keys — never the packed bus
+buffer.  A bus-resident train state (``RunConfig.packed_bus``) is unpacked
+on save and re-packed on load via the ``layout=`` argument, so checkpoints
+are interchangeable between bus and tree-resident runs and survive layout
+changes (block-row retuning, dtype-policy changes) across restarts.
+"""
 from __future__ import annotations
 
 import os
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -21,22 +29,55 @@ def _flatten(tree: Any):
     return out, treedef
 
 
-def save(path: str, tree: Any) -> None:
+def _flatten_keys(tree: Any):
+    """Path keys + leaves without materializing arrays (works on
+    ShapeDtypeStructs — ``load`` only needs shapes, not values)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    keys = [_SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in flat]
+    return keys, [leaf for _, leaf in flat]
+
+
+def _unbus(tree: Any, layout) -> Any:
+    """Expand every (A, rows, 128) bus leaf of ``tree`` into its logical
+    subtree (tree may be one bus buffer, or e.g. a {"m","psi"} dict of them)."""
+    from repro.core.bus import unpack_tree
+    return jax.tree.map(lambda b: unpack_tree(layout, b), tree)
+
+
+def save(path: str, tree: Any, layout: Optional[Any] = None) -> None:
+    """Save ``tree`` as .npz.  ``layout`` marks ``tree``'s array leaves as
+    packed-bus buffers (:class:`~repro.core.bus.BusLayout`): they are
+    unpacked to the logical tree first, keeping the on-disk format
+    layout-independent."""
+    if layout is not None:
+        tree = _unbus(tree, layout)
     arrays, _ = _flatten(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     np.savez(path, **arrays)
 
 
-def load(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (dtypes/shapes validated)."""
+def load(path: str, like: Any, layout: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``like`` (dtypes/shapes validated).
+
+    With ``layout=``, ``like``'s leaves are packed-bus buffers: the
+    checkpoint (stored logical, see :func:`save`) is loaded against the
+    unpacked structure and re-packed into bus layout on the way out.
+    """
+    if layout is not None:
+        from repro.core.bus import pack_tree
+        # structural template only — eval_shape, so no unpack is computed
+        template = jax.eval_shape(lambda t: _unbus(t, layout), like)
+        logical = load(path, template)
+        return jax.tree.map(
+            lambda b, sub: pack_tree(layout, sub), like, logical,
+            is_leaf=lambda x: hasattr(x, "ndim") and getattr(x, "ndim", 0) == 3)
     data = np.load(path)
-    arrays, treedef = _flatten(like)
-    restored = {}
-    for key, ref in arrays.items():
+    keys, refs = _flatten_keys(like)
+    leaves = []
+    for key, ref in zip(keys, refs):
         got = data[key]
-        assert got.shape == ref.shape, (key, got.shape, ref.shape)
-        restored[key] = got
-    leaves = [restored[k] for k in arrays.keys()]
-    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+        assert got.shape == tuple(ref.shape), (key, got.shape, ref.shape)
+        leaves.append(got)
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)

@@ -20,15 +20,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import (GossipSchedule, StaticSchedule, Topology,
-                        accumulate_f32, make_mixer, make_optimizer,
-                        make_schedule, make_schedule_mixer)
+                        accumulate_f32, make_edm_bus, make_mixer,
+                        make_optimizer, make_schedule, make_schedule_mixer)
+from repro.core import bus as parambus
 from repro.core.metrics import consensus_distance
 from repro.models.api import Model
 
 __all__ = [
     "TrainState", "build_train_step", "init_state", "state_specs",
     "make_topology", "make_gossip_schedule", "gossip_round_step",
-    "prepend_agent_axis", "batch_spec_tree",
+    "prepend_agent_axis", "batch_spec_tree", "use_packed_bus",
+    "bus_layout_for",
 ]
 
 
@@ -79,6 +81,30 @@ def gossip_round_step(step, gossip_every: int):
     return step // gossip_every if gossip_every > 1 else step
 
 
+def use_packed_bus(run: RunConfig) -> bool:
+    """Resolve ``RunConfig.packed_bus`` (DESIGN §5): explicit True/False
+    wins; the None default turns the bus on for the production
+    ``algorithm="edm"`` + ``gossip_engine="ppermute"`` combination, where
+    per-leaf launches and permutes dominate the step."""
+    if run.packed_bus is not None:
+        if run.packed_bus:
+            assert run.algorithm == "edm", \
+                f"packed_bus supports algorithm='edm', got {run.algorithm!r}"
+            assert run.agents == "data", \
+                "packed_bus requires agents='data' (the bus has no weight " \
+                "dim for FSDP to shard)"
+        return run.packed_bus
+    return (run.algorithm == "edm" and run.gossip_engine == "ppermute"
+            and run.agents == "data")
+
+
+def bus_layout_for(model: Model, n_agents: int) -> parambus.BusLayout:
+    """Cached bus layout of ``model``'s parameter tree with a leading agent
+    axis — the single layout object shared by ``init_state``, the train
+    step and checkpointing (shape-only, no allocation)."""
+    return parambus.layout_of(model, n_agents)
+
+
 def _cast_mixer(mix, dtype: Optional[str]):
     """Optionally gossip in a lower-precision payload (§Perf lever);
     ``accumulate_f32`` restores the original leaf dtypes on the way out."""
@@ -109,17 +135,31 @@ def build_train_step(model: Model, run: RunConfig, topo,
     slice, see DESIGN §3–4) and honors ``use_fused_kernel`` for its combine,
     so ``engine="ppermute"`` + ``use_fused_kernel=True`` composes the fused
     gossip path with the fused EDM update end-to-end.
+
+    With the packed bus active (:func:`use_packed_bus`, DESIGN §5) the step
+    runs **bus-resident**: ``state["params"]`` / ``state["opt"]`` are
+    ``(A, rows, 128)`` superbuffers, the tree is unpacked only for
+    loss/grad, the EDM update is ONE kernel over the whole bus and the
+    gossip ships one payload per term.  Jit the returned function with
+    ``donate_argnums=(0,)`` so XLA aliases the bus buffers in place.
     """
     sched = topo if isinstance(topo, GossipSchedule) else StaticSchedule(topo)
     base_mix = make_schedule_mixer(
         sched, engine=run.gossip_engine, mesh=mesh, agent_axes=agent_axes,
         use_fused_kernel=use_fused_kernel)
     kw = dict(use_fused_kernel=use_fused_kernel) if run.algorithm == "edm" else {}
+    packed = use_packed_bus(run)
+    layout = bus_layout_for(model, sched.n_agents) if packed else None
 
     def opt_at(step, mix_override=None):
-        """Algorithm with the mixer bound to ``step``'s gossip round."""
+        """Algorithm with the mixer bound to ``step``'s gossip round (the
+        bus-resident EDM when the packed bus is active)."""
         mix = mix_override if mix_override is not None else _cast_mixer(
             functools.partial(base_mix, step=step), run.gossip_dtype)
+        if packed:
+            return make_edm_bus(run.alpha, run.beta, mix,
+                                block_rows=layout.block_rows,
+                                use_fused_kernel=use_fused_kernel)
         return make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta,
                               mix=mix, **kw)
 
@@ -138,23 +178,30 @@ def build_train_step(model: Model, run: RunConfig, topo,
                                  run.total_steps or 10**9)
 
     def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
-        losses, grads = grad_fn(state["params"], batch)
+        params_tree = (parambus.unpack_tree(layout, state["params"])
+                       if packed else state["params"])
+        losses, grads = grad_fn(params_tree, batch)
         if lr_sched is not None:
             from repro.optim import scale_grads
             grads = scale_grads(grads, state["step"], lr_sched)
         g_step = gossip_round_step(state["step"], run.gossip_every)
+        g_in = parambus.pack_tree(layout, grads) if packed else grads
         opt = opt_at(g_step)
-        new_params, new_opt = opt.step(state["params"], grads, state["opt"])
         if run.gossip_every > 1:
-            # local-EDM: amortize gossip over k steps — on skip steps apply the
-            # same update with the identity mixer (W = I).
+            # local-EDM: amortize gossip over k steps.  lax.cond — not a
+            # dual-evaluation jnp.where — so skip steps execute only the
+            # identity-mixer update and never pay the gossip collectives
+            # (the round clock `g_step` is replicated, so both branches
+            # stay SPMD-consistent).
             local_opt = opt_at(g_step, mix_override=lambda t: t)
-            lp, lo = local_opt.step(state["params"], grads, state["opt"])
             do_gossip = (state["step"] % run.gossip_every) == run.gossip_every - 1
-            new_params = jax.tree.map(
-                lambda a, b: jnp.where(do_gossip, a, b), new_params, lp)
-            new_opt = jax.tree.map(
-                lambda a, b: jnp.where(do_gossip, a, b), new_opt, lo)
+            new_params, new_opt = jax.lax.cond(
+                do_gossip,
+                lambda a: opt.step(*a),
+                lambda a: local_opt.step(*a),
+                (state["params"], g_in, state["opt"]))
+        else:
+            new_params, new_opt = opt.step(state["params"], g_in, state["opt"])
         metrics = {
             "loss": jnp.mean(losses),
             "consensus": consensus_distance(new_params),
@@ -169,10 +216,23 @@ def build_train_step(model: Model, run: RunConfig, topo,
 
 
 def init_state(model: Model, run: RunConfig, n_agents: int, key) -> TrainState:
-    """All agents start from the same x(0) (paper's initialization)."""
+    """All agents start from the same x(0) (paper's initialization).
+
+    With the packed bus active the state is packed ONCE here (DESIGN §5):
+    ``params`` is the ``(A, rows, 128)`` superbuffer and ``opt`` holds the
+    bus-resident ``m``/``psi``; everything downstream stays in bus layout
+    until checkpointing.
+    """
     params1 = model.init(key)
     params = jax.tree.map(
         lambda l: jnp.broadcast_to(l[None], (n_agents,) + l.shape), params1)
+    if use_packed_bus(run):
+        layout = bus_layout_for(model, n_agents)
+        x_bus = parambus.pack_tree(layout, params)
+        opt = make_edm_bus(run.alpha, run.beta, mix=lambda t: t,
+                           block_rows=layout.block_rows)
+        return {"params": x_bus, "opt": opt.init(x_bus),
+                "step": jnp.zeros((), jnp.int32)}
     mix = make_mixer(make_topology(run, n_agents))
     opt = make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta, mix=mix)
     return {"params": params, "opt": opt.init(params),
@@ -203,6 +263,13 @@ def prepend_agent_axis(spec: P, agent_axis, fsdp_axis: Optional[str] = None) -> 
 
 def state_specs(model: Model, run: RunConfig, multi_pod: bool) -> Dict[str, Any]:
     """PartitionSpecs for the TrainState under the chosen agent granularity."""
+    if use_packed_bus(run):
+        # one (A, rows, 128) buffer per state slot, agent axis sharded —
+        # rows/lane replicated (the bus has no weight dim to FSDP-shard).
+        agent_axis = ("pod", "data") if multi_pod else "data"
+        spec = P(agent_axis)
+        return {"params": spec, "opt": {"m": spec, "psi": spec}, "step": P()}
+
     base = model.param_specs()
 
     if run.agents == "data":
