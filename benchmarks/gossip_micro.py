@@ -25,12 +25,26 @@ Three parts:
   modeled HBM bytes padded vs logical for both paths, plus a numerical
   equivalence gate (bus vs leaf-wise on a smoke transformer — nonzero exit
   on divergence, the CI contract).  Results land in ``BENCH_edm_step.json``.
+  The same sweep also times the **overlapped gossip pipeline**
+  (DESIGN §6): ``overlap="delayed"`` vs the synchronous bus step per size,
+  with the measured gossip-only us/step and the fraction of it the
+  pipeline hides, written to ``BENCH_overlap.json`` — together with the
+  delayed-vs-synchronous **loss-divergence gates** (trajectory envelope on
+  the smoke transformer inside the sweep, plus the §E.1 quadratic and
+  §E.2 logistic problems under a dense-oracle W; any gate failure raises,
+  the CI contract);
+* a BLOCK_ROWS autotune (``--autotune-block-rows``): sweeps the kernel
+  grid-tile height over {128, 256, 512, 1024} for the fused EDM update and
+  the 3-ary gossip combine across bus sizes and prints the argmin per size
+  (the ROADMAP "tune BLOCK_ROWS" knob; wall-clock is interpret-mode on CPU
+  — re-run on a real TPU for the production number).
 
 CLI::
 
     python -m benchmarks.gossip_micro --schedule round_robin --steps 8
     python -m benchmarks.gossip_micro --schedule all --block-rows 256
     python -m benchmarks.gossip_micro --e2e-step
+    python -m benchmarks.gossip_micro --autotune-block-rows
 """
 from __future__ import annotations
 
@@ -45,6 +59,7 @@ import jax
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(REPO, "BENCH_gossip.json")
 BENCH_EDM_JSON = os.path.join(REPO, "BENCH_edm_step.json")
+BENCH_OVERLAP_JSON = os.path.join(REPO, "BENCH_overlap.json")
 _SWEEP_MARKER = "SWEEP_CSV_JSON:"
 _SCHED_MARKER = "SCHED_JSON:"
 _E2E_MARKER = "E2E_JSON:"
@@ -236,7 +251,9 @@ def e2e_step_sweep(iters: int = 6) -> List[dict]:
     import numpy as np
 
     from repro.configs.base import ModelConfig, RunConfig
-    from repro.core import bus as parambus, make_edm_bus, ring
+    from repro.core import (bus as parambus, make_edm_bus,
+                            make_schedule_mixer, ring)
+    from .common import timeit_us
     from repro.data import SyntheticLM
     from repro.kernels.edm_update import BLOCK_ROWS
     from repro.kernels.ops import padded_size
@@ -253,6 +270,7 @@ def e2e_step_sweep(iters: int = 6) -> List[dict]:
     n_perm = sum(1 for t in topo.terms if t.shift != 0)
 
     results = []
+    overlap_rows = []
     for size, dims in E2E_SIZES.items():
         cfg = ModelConfig(name=f"bus-e2e-{size}", family="dense",
                           n_heads=2, n_kv_heads=2, vocab_size=256,
@@ -268,10 +286,13 @@ def e2e_step_sweep(iters: int = 6) -> List[dict]:
 
         us = {}
         losses = {}
-        for packed in (False, True):
+        for mode in ("leafwise", "bus", "bus_delayed"):
+            packed = mode != "leafwise"
             run = RunConfig(global_batch=A, seq_len=16, algorithm="edm",
                             alpha=0.2, gossip_engine="ppermute",
-                            packed_bus=packed, remat=False)
+                            packed_bus=packed,
+                            overlap="delayed" if mode == "bus_delayed"
+                            else "off", remat=False)
             sched = make_gossip_schedule(run, A)
             state = init_state(model, run, A, jax.random.PRNGKey(0))
             step = jax.jit(build_train_step(model, run, sched, mesh=mesh,
@@ -284,16 +305,69 @@ def e2e_step_sweep(iters: int = 6) -> List[dict]:
             for _ in range(iters):
                 state, m = step(state, batch)
             jax.block_until_ready(m["loss"])
-            us[packed] = (time.perf_counter() - t0) / iters * 1e6
+            us[mode] = (time.perf_counter() - t0) / iters * 1e6
             traj.append(float(m["loss"]))
-            losses[packed] = traj
+            losses[mode] = traj
         # equivalence gate: identical data + init ⇒ identical losses up to
         # f32 reassociation drift over the iters-step trajectory (the two
         # paths reduce in different orders; tests/test_bus.py pins 3 steps
         # at 1e-5 — a real divergence, e.g. the naive-bf16 bias, is ~1e-2+)
         np.testing.assert_allclose(
-            losses[True], losses[False], rtol=1e-4, atol=1e-5,
+            losses["bus"], losses["leafwise"], rtol=1e-4, atol=1e-5,
             err_msg=f"bus vs leaf-wise losses diverged at size={size}")
+
+        # overlap divergence gate (DESIGN §6): the delayed pipeline's loss
+        # at step t is evaluated at the pre-mix iterate φ(t) — between the
+        # synchronous x(t) and x(t+1) — so gate the 8-step trajectory
+        # against the synchronous envelope [loss(t+1), loss(t)] ± 5%.
+        # Gate runs at a stable α=0.05: one-step staleness at an
+        # aggressive LR degrades per-step progress by design (the §E.1/E.2
+        # floor gates below cover the convergence claim); the envelope
+        # checks the *semantics* — φ(t) must sit between x(t) and x(t+1).
+        traj_sync = _e2e_loss_traj(model, batch, mesh, axes, A, "off",
+                                   steps=9)
+        traj_del = _e2e_loss_traj(model, batch, mesh, axes, A, "delayed")
+        assert abs(traj_del[0] - traj_sync[0]) < 1e-5, \
+            (size, "overlap step 0 must match the synchronous step exactly")
+        for t in range(len(traj_sync) - 1):
+            lo = min(traj_sync[t], traj_sync[t + 1])
+            hi = max(traj_sync[t], traj_sync[t + 1])
+            tol = 0.05 * abs(traj_sync[t])
+            assert lo - tol <= traj_del[t] <= hi + tol, (
+                f"overlap divergence gate failed at size={size} step={t}: "
+                f"delayed={traj_del[t]:.5f} outside sync envelope "
+                f"[{lo:.5f}, {hi:.5f}] ± {tol:.5f}")
+
+        # gossip-only wall time of the synchronous path on this size's bus
+        # (the wire+combine the delayed pipeline moves off the critical
+        # path); pct_gossip_hidden = how much of it the overlap recovered.
+        run_g = RunConfig(global_batch=A, seq_len=16, algorithm="edm",
+                          alpha=0.2, gossip_engine="ppermute",
+                          packed_bus=True, remat=False)
+        sched_g = make_gossip_schedule(run_g, A)
+        mix_g = make_schedule_mixer(sched_g, "ppermute", mesh=mesh,
+                                    agent_axes=axes)
+        bus0 = init_state(model, run_g, A, jax.random.PRNGKey(0))["params"]
+        gossip_us = timeit_us(jax.jit(lambda b: mix_g(b, step=0)), bus0,
+                              iters=max(iters * 3, 10))
+        hidden = (us["bus"] - us["bus_delayed"]) / max(gossip_us, 1e-9)
+        overlap_rows.append({
+            "size": size, "agents": A, "elems_per_agent": n_logical,
+            "block_rows": layout.block_rows,
+            "us_per_step_off": round(us["bus"], 1),
+            "us_per_step_delayed": round(us["bus_delayed"], 1),
+            "speedup_off_to_delayed":
+                round(us["bus"] / us["bus_delayed"], 3),
+            "gossip_us_per_step": round(gossip_us, 1),
+            # share of the synchronous step the wire occupies on THIS
+            # backend — the ceiling of what overlap can recover here; on
+            # the CPU host mesh it is single-digit %, so pct_gossip_hidden
+            # is dominated by step-time variance (the TPU ICI share is the
+            # number that matters, see DESIGN §6).
+            "gossip_pct_of_step": round(100.0 * gossip_us / us["bus"], 1),
+            "pct_gossip_hidden": round(100.0 * hidden, 1),
+            "divergence_gate": "pass",
+        })
 
         # fused-path HBM model (f32): the EDM update streams 7 buffers of
         # the full per-agent set, the n-ary combine n_terms + 1 — padded to
@@ -310,14 +384,14 @@ def e2e_step_sweep(iters: int = 6) -> List[dict]:
                   "block_rows": layout.block_rows,
                   "wire_bytes_logical": n_perm * A * n_logical * 4}
         results.append({**common, "path": "leafwise",
-                        "us_per_step": round(us[False], 1),
+                        "us_per_step": round(us["leafwise"], 1),
                         "permutes_per_step": L * n_perm,
                         "kernel_launches_per_step": 2 * L,
                         "hbm_bytes_logical": hbm_logical,
                         "hbm_bytes_padded": leaf_padded,
                         "wire_bytes_padded": n_perm * A * n_logical * 4})
         results.append({**common, "path": "bus",
-                        "us_per_step": round(us[True], 1),
+                        "us_per_step": round(us["bus"], 1),
                         "permutes_per_step": n_perm,
                         "kernel_launches_per_step": 2,
                         "hbm_bytes_logical": hbm_logical,
@@ -325,7 +399,7 @@ def e2e_step_sweep(iters: int = 6) -> List[dict]:
                         "wire_bytes_padded":
                             n_perm * A * layout.padded_elems * 4,
                         "speedup_vs_leafwise":
-                            round(us[False] / us[True], 2)})
+                            round(us["leafwise"] / us["bus"], 2)})
 
         # gate 2 (smallest size only): fused bus kernel == unfused bus at
         # the optimizer level.
@@ -355,10 +429,30 @@ def e2e_step_sweep(iters: int = 6) -> List[dict]:
             np.testing.assert_allclose(
                 np.asarray(x_fu), np.asarray(x_un), rtol=1e-5, atol=1e-5,
                 err_msg="fused bus kernel vs unfused bus diverged")
-    return results
+    return {"rows": results, "overlap": overlap_rows}
 
 
-def _e2e_subprocess(iters: int = 6) -> List[dict]:
+def _e2e_loss_traj(model, batch, mesh, axes, A, overlap, steps: int = 8):
+    """Fresh-state loss trajectory of the packed-bus train step with the
+    given overlap mode at a stable α — the divergence-gate input."""
+    from repro.configs.base import RunConfig
+    from repro.train import build_train_step, init_state, make_gossip_schedule
+
+    run = RunConfig(global_batch=A, seq_len=16, algorithm="edm", alpha=0.05,
+                    gossip_engine="ppermute", packed_bus=True,
+                    overlap=overlap, remat=False)
+    sched = make_gossip_schedule(run, A)
+    state = init_state(model, run, A, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model, run, sched, mesh=mesh,
+                                    agent_axes=axes))
+    traj = []
+    for _ in range(steps):
+        state, m = step(state, batch)
+        traj.append(float(m["loss"]))
+    return traj
+
+
+def _e2e_subprocess(iters: int = 6) -> dict:
     """Run :func:`e2e_step_sweep` under an 8-device host platform."""
     env = {**os.environ,
            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
@@ -374,6 +468,184 @@ def _e2e_subprocess(iters: int = 6) -> List[dict]:
             return json.loads(line[len(_E2E_MARKER):])
     raise RuntimeError(f"e2e step sweep failed:\n{r.stdout[-2000:]}"
                        f"\n{r.stderr[-2000:]}")
+
+
+# ---------------------------------------------------------------------------
+# overlap divergence gates (DESIGN §6) — dense-oracle W, single device
+# ---------------------------------------------------------------------------
+
+def _edm_sync_vs_delayed(grad_fn, x0, W, *, alpha: float, beta: float,
+                         steps: int, seed: int, eval_fn):
+    """Eval trajectories of synchronous EDM vs the delayed (one-step-stale
+    mixing) pipeline variant under a dense W, driven by the SAME noise keys
+    — the only difference is where the gradient is evaluated: at the mixed
+    iterate x(t) = W φ(t) (sync) vs the pre-mix φ(t) (delayed)."""
+    import jax.numpy as jnp
+
+    Wj = jnp.asarray(W, jnp.float32)
+
+    def sync_body(carry, key):
+        x, m, psi = carry
+        g = grad_fn(x, key)
+        m2 = beta * m + (1.0 - beta) * g
+        psi2 = x - alpha * m2
+        phi = psi2 + x - psi
+        x2 = Wj @ phi
+        return (x2, m2, psi2), eval_fn(x2)
+
+    def delayed_body(carry, key):
+        phi, m, psi = carry
+        x = Wj @ phi               # complete: the in-flight payload's mix
+        g = grad_fn(phi, key)      # compute: grads at the pre-mix iterate
+        m2 = beta * m + (1.0 - beta) * g
+        psi2 = x - alpha * m2
+        phi2 = psi2 + x - psi
+        return (phi2, m2, psi2), eval_fn(x)
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
+    z = jnp.zeros_like(x0)
+    _, e_sync = jax.lax.scan(sync_body, (x0, z, x0), keys)
+    _, e_del = jax.lax.scan(delayed_body, (x0, z, x0), keys)
+    import numpy as np
+    return np.asarray(e_sync), np.asarray(e_del)
+
+
+def overlap_divergence_gates(verbose: bool = True) -> dict:
+    """The §E.1 quadratic and §E.2 logistic gates for ``overlap="delayed"``:
+    the stale-mixing variant must converge to (near) the synchronous floor.
+    Raises on failure — the CI contract for the overlap pipeline."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import ring
+    from repro.data import logistic_problem, quadratic_problem
+
+    gates = {}
+    n = 32
+    W = ring(n).dense_matrix()
+
+    stoch, _, x_opt, zeta2 = quadratic_problem(n, d=10, p=20, c=1.0,
+                                               sigma=0.05, seed=0)
+    x0 = jnp.zeros((n, 10))
+    err = lambda x: jnp.mean(jnp.sum((x - x_opt[None]) ** 2, -1))
+    e_sync, e_del = _edm_sync_vs_delayed(stoch, x0, W, alpha=0.05, beta=0.9,
+                                         steps=1500, seed=0, eval_fn=err)
+    floor_s = float(np.mean(e_sync[-150:]))
+    floor_d = float(np.mean(e_del[-150:]))
+    assert floor_d <= 2.0 * floor_s + 1e-8, \
+        f"quadratic overlap gate: delayed floor {floor_d:.3e} vs " \
+        f"sync {floor_s:.3e}"
+    assert floor_d < float(e_del[0]), "quadratic overlap gate: no progress"
+    gates["quadratic"] = {"steps": 1500, "zeta2": zeta2,
+                          "floor_sync": floor_s, "floor_delayed": floor_d,
+                          "ratio": round(floor_d / max(floor_s, 1e-12), 3)}
+    if verbose:
+        print(f"  overlap gate quadratic: sync={floor_s:.3e} "
+              f"delayed={floor_d:.3e} ratio={gates['quadratic']['ratio']}")
+
+    stoch, _, mean_loss = logistic_problem(n, d=20, m=500, seed=0)
+    x0 = jnp.zeros((n, 20))
+    lloss = lambda x: mean_loss(jnp.mean(x, axis=0))
+    l_sync, l_del = _edm_sync_vs_delayed(stoch, x0, W, alpha=0.1, beta=0.9,
+                                         steps=800, seed=1, eval_fn=lloss)
+    fin_s = float(np.mean(l_sync[-80:]))
+    fin_d = float(np.mean(l_del[-80:]))
+    assert fin_d <= 1.05 * fin_s + 1e-8, \
+        f"logistic overlap gate: delayed {fin_d:.4f} vs sync {fin_s:.4f}"
+    gates["logistic"] = {"steps": 800, "loss_sync": fin_s,
+                         "loss_delayed": fin_d,
+                         "ratio": round(fin_d / max(fin_s, 1e-12), 4)}
+    if verbose:
+        print(f"  overlap gate logistic: sync={fin_s:.4f} "
+              f"delayed={fin_d:.4f} ratio={gates['logistic']['ratio']}")
+    return gates
+
+
+def write_overlap_bench_json(overlap_rows: List[dict], gates: dict) -> str:
+    """Persist the overlap pipeline sweep + divergence gates to
+    BENCH_overlap.json at the repo root."""
+    payload = {
+        "bench": "gossip_overlap_pipeline",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "note": (
+            "CPU host-mesh wall clock validates structure and parity only: "
+            "XLA CPU executes collectives inline, so the wire cannot hide "
+            "behind compute here and gossip is a single-digit % of the "
+            "step (gossip_pct_of_step).  The overlap claim is the TPU "
+            "half: the delayed step's permute-starts precede the backward "
+            "pass and the payload stack is complete()'s only wire "
+            "dependency (DESIGN §6); divergence_gates carry the "
+            "backend-independent correctness contract."),
+        "results": overlap_rows,
+        "divergence_gates": gates,
+    }
+    with open(BENCH_OVERLAP_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return BENCH_OVERLAP_JSON
+
+
+def _overlap_csv_rows(rows: List[dict]) -> List[str]:
+    from .common import csv_row
+    return [csv_row(
+        f"edm_step/{row['size']}/bus_delayed", row["us_per_step_delayed"],
+        f"off={row['us_per_step_off']};"
+        f"speedup={row['speedup_off_to_delayed']}x;"
+        f"gossip_us={row['gossip_us_per_step']};"
+        f"hidden={row['pct_gossip_hidden']}%") for row in rows]
+
+
+# ---------------------------------------------------------------------------
+# BLOCK_ROWS autotune (ROADMAP "tune BLOCK_ROWS", CPU-measurable half)
+# ---------------------------------------------------------------------------
+
+def autotune_block_rows(candidates=(128, 256, 512, 1024),
+                        rows_sizes=(1024, 4096, 8192),
+                        iters: int = 5, verbose: bool = True) -> List[dict]:
+    """Sweep the Pallas grid-tile height for the fused EDM update and the
+    3-ary gossip combine over per-agent bus sizes; prints the argmin per
+    size.  On CPU the kernels run in interpret mode — the sweep machinery
+    and the printed table are the portable half; re-run on a real TPU for
+    the production argmin (REPRO_BLOCK_ROWS / --block-rows set it)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.edm_update import edm_update_flat, gossip_axpy_flat
+    from .common import timeit_us
+
+    interpret = jax.default_backend() != "tpu"
+    out = []
+    for rows in rows_sizes:
+        ks = jax.random.split(jax.random.PRNGKey(rows), 4)
+        bufs = [jax.random.normal(k, (rows, 128), jnp.float32) for k in ks]
+        row = {"rows": rows, "elems": rows * 128,
+               "backend": jax.default_backend(),
+               "interpret": interpret, "candidates": list(candidates)}
+        for kernel in ("edm_update", "gossip_axpy"):
+            us = {}
+            for br in candidates:
+                if rows % br:
+                    continue
+                if kernel == "edm_update":
+                    fn = jax.jit(lambda a, b, c, d, br=br: edm_update_flat(
+                        a, b, c, d, alpha=0.05, beta=0.9, block_rows=br,
+                        interpret=interpret))
+                    args = bufs
+                else:
+                    fn = jax.jit(lambda a, b, c, br=br: gossip_axpy_flat(
+                        (a, b, c), (0.5, 0.25, 0.25), block_rows=br,
+                        interpret=interpret))
+                    args = bufs[:3]
+                us[br] = timeit_us(fn, *args, iters=iters)
+            best = min(us, key=us.get)
+            row[kernel] = {"us": {str(k): round(v, 1) for k, v in us.items()},
+                           "best": best}
+            if verbose:
+                table = " ".join(f"{br}:{u:.0f}us" for br, u in us.items())
+                print(f"  block_rows/{kernel}/rows={rows}: {table} "
+                      f"-> argmin={best}")
+        out.append(row)
+    return out
 
 
 def write_edm_bench_json(results: List[dict]) -> str:
@@ -549,23 +821,34 @@ def _cli() -> None:
                     help="Pallas BLOCK_ROWS override for the fused combine "
                          "(0 = REPRO_BLOCK_ROWS / default)")
     ap.add_argument("--e2e-step", action="store_true",
-                    help="leaf-wise vs bus-resident EDM step sweep "
-                         "(in an 8-device subprocess) + equivalence gates; "
-                         "writes BENCH_edm_step.json")
+                    help="leaf-wise vs bus-resident vs overlapped EDM step "
+                         "sweep (in an 8-device subprocess) + equivalence "
+                         "and overlap divergence gates; writes "
+                         "BENCH_edm_step.json and BENCH_overlap.json")
     ap.add_argument("--e2e-inner", action="store_true",
                     help="(inner) e2e step sweep; needs 8 devices")
     ap.add_argument("--iters", type=int, default=6,
                     help="timing iterations per e2e config")
+    ap.add_argument("--autotune-block-rows", action="store_true",
+                    help="sweep the kernel BLOCK_ROWS tile over "
+                         "{128,256,512,1024} per bus size and print the "
+                         "argmin (interpret-mode wall clock off-TPU)")
     args = ap.parse_args()
 
     if args.sweep:
         print(_SWEEP_MARKER + json.dumps(sweep()))
+    elif args.autotune_block_rows:
+        autotune_block_rows()
     elif args.e2e_inner:
         print(_E2E_MARKER + json.dumps(e2e_step_sweep(iters=args.iters)))
     elif args.e2e_step:
-        rows = _e2e_subprocess(iters=args.iters)
+        payload = _e2e_subprocess(iters=args.iters)
+        rows, overlap_rows = payload["rows"], payload["overlap"]
         print("\n".join(_e2e_csv_rows(rows)))
+        print("\n".join(_overlap_csv_rows(overlap_rows)))
+        gates = overlap_divergence_gates()
         print(f"wrote {write_edm_bench_json(rows)}")
+        print(f"wrote {write_overlap_bench_json(overlap_rows, gates)}")
     elif args.schedule_inner:
         print(_SCHED_MARKER + json.dumps(schedule_sweep(
             args.schedule_inner, steps=args.steps,

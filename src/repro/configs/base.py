@@ -176,6 +176,12 @@ class RunConfig:
     # ppermute per gossip term per step.  None = auto: on for the
     # algorithm="edm" + gossip_engine="ppermute" production path.
     packed_bus: Optional[bool] = None
+    # overlapped gossip pipeline (DESIGN §6): "off" = synchronous gossip on
+    # the critical path (bit-identical to the plain bus step); "delayed" =
+    # one-step-stale mixing — the live payload's permutes are issued before
+    # the backward pass and combined after it, so wire time hides behind
+    # compute.  Requires the packed bus (the payload is ONE buffer).
+    overlap: str = "off"             # off | delayed
     gossip_dtype: str = "float32"    # bf16 payload is a §Perf lever
     gossip_every: int = 1            # gossip every k steps (local-EDM, §Perf)
     moe_sharding: bool = False       # explicit MoE dispatch constraints (§Perf)

@@ -5,7 +5,7 @@ from .topology import (  # noqa: F401
 )
 from .mixing import (  # noqa: F401
     mix_dense, mix_shifts, mix_ppermute, make_mixer, make_schedule_mixer,
-    accumulate_f32,
+    make_overlap_mixer, accumulate_f32,
 )
 from .schedule import (  # noqa: F401
     GossipSchedule, StaticSchedule, RoundRobinExp, AlternatingHierarchical,
@@ -16,6 +16,6 @@ from .optimizers import (  # noqa: F401
 )
 from .bus import (  # noqa: F401
     BusLayout, LeafSlot, make_layout, layout_of, pack_tree, unpack_tree,
-    leaf_views,
+    leaf_views, make_pipeline, pipeline_payload, pipeline_advance,
 )
 from . import metrics  # noqa: F401

@@ -43,7 +43,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["LANE", "BusLayout", "LeafSlot", "make_layout", "layout_of",
-           "pack_tree", "unpack_tree", "leaf_views", "padded_rows"]
+           "pack_tree", "unpack_tree", "leaf_views", "padded_rows",
+           "make_pipeline", "pipeline_payload", "pipeline_advance"]
 
 LANE = 128  # must match repro.kernels.edm_update.LANE
 _SUBLANE = 8  # 8×128 VPU tile: every leaf slot starts on an 8-row boundary
@@ -211,6 +212,44 @@ def unpack_tree(layout: BusLayout, bus: jax.Array) -> Any:
     leaves = [v.astype(slot.dtype)
               for v, slot in zip(_slot_views(layout, bus), layout.slots)]
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# double-buffered pipeline slots (DESIGN §6)
+# ---------------------------------------------------------------------------
+#
+# The overlapped gossip pipeline carries its in-flight payload in the train
+# state: ``slot`` is a (2, A, rows, 128) stack of two bus buffers and
+# ``parity`` a replicated int32 bit selecting the LIVE one.  Step t reads
+# slot[parity] (its permutes are issued before the backward pass), writes the
+# freshly produced payload φ' into slot[1−parity], and flips the bit — so the
+# buffer a collective is still reading is never the one the EDM update
+# writes, and a donated step aliases both slots in place with no
+# write-after-read hazard between the wire and the update.
+
+def make_pipeline(bus: jax.Array) -> dict:
+    """Initial pipeline state: ``bus`` (= φ(0) = x(0)) in the live slot,
+    zeros in the spare, parity 0."""
+    assert bus.ndim == 3 and bus.shape[-1] == LANE, bus.shape
+    return {"slot": jnp.stack([bus, jnp.zeros_like(bus)]),
+            "parity": jnp.zeros((), jnp.int32)}
+
+
+def pipeline_payload(pipe: dict) -> jax.Array:
+    """The live in-flight payload ``slot[parity]`` — what this step's gossip
+    permutes ship (parity is replicated, so the dynamic index is
+    SPMD-consistent)."""
+    return jax.lax.dynamic_index_in_dim(pipe["slot"], pipe["parity"], axis=0,
+                                        keepdims=False)
+
+
+def pipeline_advance(pipe: dict, phi_new: jax.Array) -> dict:
+    """Write the next payload into the spare slot and flip the parity bit.
+    The old live slot's contents become dead but stay allocated — that's the
+    double buffer."""
+    slot = jax.lax.dynamic_update_index_in_dim(pipe["slot"], phi_new,
+                                               1 - pipe["parity"], axis=0)
+    return {"slot": slot, "parity": 1 - pipe["parity"]}
 
 
 def leaf_views(layout: BusLayout, bus: jax.Array) -> Any:

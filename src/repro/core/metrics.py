@@ -8,6 +8,8 @@ import jax.numpy as jnp
 
 __all__ = [
     "agent_mean",
+    "bus_consensus",
+    "bus_grad_norm",
     "consensus_distance",
     "grad_norm_at_mean",
     "heterogeneity_zeta2",
@@ -29,6 +31,27 @@ def consensus_distance(tree: Any) -> jax.Array:
     """‖X − X̄‖²_F — the paper's deviation term E‖P_I X‖²."""
     mean = agent_mean(tree)
     return tree_sqnorm(jax.tree.map(lambda x, m: x - m, tree, mean))
+
+
+# ---------------------------------------------------------------------------
+# packed-bus diagnostics (DESIGN §5/§6): the bus's pad elements are zero by
+# layout contract, so a single fused reduction over the (A, rows, 128)
+# superbuffer equals the per-leaf reduction over the logical tree — no
+# unpack, no per-leaf reduction kernels on the metrics path.
+# ---------------------------------------------------------------------------
+
+def bus_consensus(bus: jax.Array) -> jax.Array:
+    """‖X − X̄‖²_F over a packed ``(A, rows, 128)`` bus in ONE reduction
+    (pad rows deviate by 0, so this equals the logical-tree consensus)."""
+    dev = bus - jnp.mean(bus, axis=0, keepdims=True)
+    return jnp.sum(jnp.square(dev.astype(jnp.float32)))
+
+
+def bus_grad_norm(g_bus: jax.Array) -> jax.Array:
+    """Global gradient norm over a packed gradient bus in ONE reduction
+    (equals the per-leaf sqrt-of-sum over the unpacked grads: the bus is
+    f32 and its pads are zero)."""
+    return jnp.sqrt(jnp.sum(jnp.square(g_bus.astype(jnp.float32))))
 
 
 def grad_norm_at_mean(grad_fn, params: Any) -> jax.Array:

@@ -36,13 +36,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.compat import shard_map
 
 from .topology import Topology
 
 __all__ = ["mix_dense", "mix_shifts", "mix_ppermute", "make_mixer",
-           "make_schedule_mixer", "accumulate_f32"]
+           "make_schedule_mixer", "make_overlap_mixer", "accumulate_f32"]
 
 
 def accumulate_f32(fn):
@@ -165,32 +166,12 @@ def _blocked_roll(x, shift: int, bloc: int, n_ring: int, n_dev: int,
     return jnp.concatenate([p2, p1], axis=0)
 
 
-def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
-                 use_fused_kernel: bool = False,
-                 interpret: bool | None = None) -> Any:
-    """Production gossip engine: ``shard_map`` + ``jax.lax.ppermute``.
-
-    The agent axis is *consumed* by the mesh (a block of A/M agents per mesh
-    slice along ``agent_axes``); every gossip term becomes at most two
-    ppermutes with literal source→target lists, so the communication
-    schedule is pinned rather than left to GSPMD's roll lowering.
-
-    * One agent per device (B = 1): each term is one ppermute straight from
-      :meth:`Topology.term_sources`; hierarchical topologies decompose onto
-      split ``(pod, data)`` mesh axes, or linearize onto one flat axis.
-    * Blocked (B > 1, the A > device-count mode): flat and inter terms run
-      the blocked-roll decomposition (:func:`_blocked_roll` — local shift +
-      boundary permutes, sub-block shifts ship only boundary rows); intra
-      terms are fully local when each device holds whole pods, else run the
-      blocked roll on the pod's device sub-ring.
-
-    With ``use_fused_kernel=True`` the per-term weighted accumulation runs as
-    one n-ary Pallas ``gossip_axpy`` combine per leaf instead of a chain of
-    mul/add HBM round-trips (DESIGN §3).
-    """
-    from jax.sharding import PartitionSpec as P
-
-    names, sizes, split, B = _agent_axis_info(topo, mesh, agent_axes)
+def _make_permute_term(topo: Topology, names, sizes, split: bool, B: int):
+    """The per-term wire plan of the ppermute engine: returns
+    ``permute_term(x, t) -> x_permuted`` for one shard's agent block — the
+    single closure behind both the synchronous ``mix_ppermute`` combine and
+    the overlap pipeline's issue phase (DESIGN §6), so the two paths cannot
+    drift in what they put on the wire."""
     axis_flat = names if len(names) > 1 else names[0]
     A = topo.n_agents
     M = A // B
@@ -225,6 +206,71 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
         perm = [(int(s), d) for d, s in enumerate(src)]
         return jax.lax.ppermute(x, axis_flat, perm)
 
+    return permute_term
+
+
+def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
+                 use_fused_kernel: bool = False,
+                 interpret: bool | None = None,
+                 transport: str = "auto") -> Any:
+    """Production gossip engine: ``shard_map`` + ``jax.lax.ppermute``.
+
+    The agent axis is *consumed* by the mesh (a block of A/M agents per mesh
+    slice along ``agent_axes``); every gossip term becomes at most two
+    ppermutes with literal source→target lists, so the communication
+    schedule is pinned rather than left to GSPMD's roll lowering.
+
+    * One agent per device (B = 1): each term is one ppermute straight from
+      :meth:`Topology.term_sources`; hierarchical topologies decompose onto
+      split ``(pod, data)`` mesh axes, or linearize onto one flat axis.
+    * Blocked (B > 1, the A > device-count mode): flat and inter terms run
+      the blocked-roll decomposition (:func:`_blocked_roll` — local shift +
+      boundary permutes, sub-block shifts ship only boundary rows); intra
+      terms are fully local when each device holds whole pods, else run the
+      blocked roll on the pod's device sub-ring.
+
+    With ``use_fused_kernel=True`` the per-term weighted accumulation runs as
+    one n-ary Pallas ``gossip_axpy`` combine per leaf instead of a chain of
+    mul/add HBM round-trips (DESIGN §3).
+
+    ``transport`` selects the wire mechanism (DESIGN §6 fallback matrix):
+    ``"ppermute"`` forces the shard_map + ``lax.ppermute`` path above;
+    ``"ring_dma"`` forces the Pallas remote-DMA ring kernel
+    (:mod:`repro.kernels.ring_dma` — fuses the permute into the combine so
+    payloads never round-trip HBM between the two; flat ±1 rings on a real
+    TPU only); ``"auto"`` picks ring_dma when it is supported for this
+    topology/mesh/payload, the fused combine was requested AND the
+    operator opted in with ``REPRO_RING_DMA=1`` (the kernel follows the
+    guide's RDMA pattern but is not yet validated on hardware — auto must
+    not silently swap it into a production run), else ppermute.  Off-TPU
+    (this container) every selection falls back to ppermute.
+    """
+    import os
+
+    from jax.sharding import PartitionSpec as P
+
+    names, sizes, split, B = _agent_axis_info(topo, mesh, agent_axes)
+    axis_flat = names if len(names) > 1 else names[0]
+    A = topo.n_agents
+    permute_term = _make_permute_term(topo, names, sizes, split, B)
+
+    assert transport in ("auto", "ppermute", "ring_dma"), transport
+    ring_plan = None
+    if transport != "ppermute":
+        from repro.kernels import ring_dma
+        eligible = (ring_dma.ring_dma_supported(topo, n_axes=len(names), B=B)
+                    and all(getattr(l, "ndim", 0) == 3 and l.shape[-1] == 128
+                            for l in jax.tree.leaves(tree)))
+        if transport == "ring_dma":
+            assert eligible, (
+                "transport='ring_dma' needs a flat ±1-ring topology, one "
+                "agent per device on a single mesh axis, (A, rows, 128) "
+                "payloads and a real TPU backend")
+        opted_in = os.environ.get("REPRO_RING_DMA", "") == "1"
+        if eligible and (transport == "ring_dma"
+                         or (use_fused_kernel and opted_in)):
+            ring_plan = ring_dma.ring_plan(topo)
+
     weights = tuple(float(t.weight) for t in topo.terms)
 
     def combine(payloads):
@@ -239,6 +285,12 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
 
     def body(*leaves):
         # each leaf arrives as (B, *shape) — this shard's agent block
+        if ring_plan is not None:
+            from repro.kernels import ring_dma
+            return tuple(
+                ring_dma.ring_combine_shard(x, ring_plan,
+                                            axis_name=axis_flat, n_devices=A)
+                for x in leaves)
         return tuple(combine([permute_term(x, t) for t in topo.terms])
                      for x in leaves)
 
@@ -249,12 +301,14 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
 
 
 def make_mixer(topo: Topology, engine: str = "shifts", mesh=None,
-               agent_axes=None, use_fused_kernel: bool = False):
+               agent_axes=None, use_fused_kernel: bool = False,
+               transport: str = "auto"):
     """Return ``mix(tree) -> tree``.  engine ∈ {"dense", "shifts", "ppermute"}.
 
     ``mesh``/``agent_axes`` are required for (and only used by) the ppermute
     engine; ``use_fused_kernel`` routes its combine through the fused Pallas
-    ``gossip_axpy`` kernel.
+    ``gossip_axpy`` kernel and ``transport`` selects its wire mechanism
+    (see :func:`mix_ppermute`).
     """
     if engine == "dense":
         return functools.partial(mix_dense, topo)
@@ -264,7 +318,8 @@ def make_mixer(topo: Topology, engine: str = "shifts", mesh=None,
         assert mesh is not None and agent_axes is not None, \
             "ppermute engine needs mesh= and agent_axes="
         return functools.partial(mix_ppermute, topo, mesh, agent_axes,
-                                 use_fused_kernel=use_fused_kernel)
+                                 use_fused_kernel=use_fused_kernel,
+                                 transport=transport)
     raise ValueError(f"unknown mixing engine: {engine}")
 
 
@@ -293,3 +348,89 @@ def make_schedule_mixer(sched, engine: str = "shifts", mesh=None,
         return jax.lax.switch(step % sched.period, mixers, tree)
 
     return mix
+
+
+def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
+                       agent_axes=None, use_fused_kernel: bool = False,
+                       interpret: bool | None = None):
+    """Phase-split schedule mixer for the overlapped gossip pipeline
+    (DESIGN §6): returns ``(issue, complete)`` such that
+    ``complete(issue(x, step), step)`` equals the synchronous
+    ``make_schedule_mixer(...)(x, step)`` for a single-array payload ``x``
+    (the packed bus).
+
+    ``issue`` runs ONLY the round's collective permutes — no arithmetic —
+    and returns a ``(K, A, ...)`` stack of per-term payloads, where
+    ``K = max arity over rounds``; shorter rounds pad the stack with the
+    unpermuted payload under weight 0, so every round shares one stack
+    shape (a traced-step ``lax.switch`` needs that) and one combine kernel
+    arity.  ``complete`` runs only the weighted n-ary combine (the fused
+    ``gossip_axpy`` when requested).  Everything the caller places between
+    the two calls — the backward pass, in the trainer — is
+    data-independent of the in-flight permutes, which is exactly the
+    window XLA's latency-hiding scheduler uses to take the wire off the
+    critical path.
+
+    For the ``dense``/``shifts`` engines there is no separable wire phase:
+    ``issue`` is the identity and ``complete`` the full mix, so the delayed
+    pipeline's *algorithmic* semantics (gradients at the pre-mix iterate)
+    are engine-independent and single-device-testable even though only the
+    ppermute engine gains overlap.
+    """
+    if engine != "ppermute":
+        mix = make_schedule_mixer(sched, engine, mesh=mesh,
+                                  agent_axes=agent_axes,
+                                  use_fused_kernel=use_fused_kernel)
+        return (lambda x, step=0: x), mix
+
+    from jax.sharding import PartitionSpec as P
+
+    assert mesh is not None and agent_axes is not None, \
+        "overlap mixer needs mesh= and agent_axes= for the ppermute engine"
+    K = max(len(r.terms) for r in sched.rounds)
+    w_np = np.zeros((sched.period, K), np.float32)
+    for r, topo in enumerate(sched.rounds):
+        w_np[r, :len(topo.terms)] = [t.weight for t in topo.terms]
+    w_table = jnp.asarray(w_np)
+
+    names0, _, _, _ = _agent_axis_info(sched.rounds[0], mesh, agent_axes)
+    axis0 = names0 if len(names0) > 1 else names0[0]
+
+    def make_issue(topo):
+        names, sizes, split, B = _agent_axis_info(topo, mesh, agent_axes)
+        axis_flat = names if len(names) > 1 else names[0]
+        permute_term = _make_permute_term(topo, names, sizes, split, B)
+
+        def body(x):
+            pays = [permute_term(x, t) for t in topo.terms]
+            pays += [x] * (K - len(pays))   # weight-0 pad to the max arity
+            return jnp.stack(pays)
+
+        return shard_map(body, mesh, (P(axis_flat),), P(None, axis_flat))
+
+    issues = [make_issue(r) for r in sched.rounds]
+
+    def issue(x, step=0):
+        if sched.period == 1:
+            return issues[0](x)
+        if isinstance(step, int):
+            return issues[step % sched.period](x)
+        return jax.lax.switch(step % sched.period, issues, x)
+
+    def combine_body(w, p):
+        # p: (K, B_shard, ...) payload stack for this shard's agent block
+        ops = [p[k] for k in range(K)]
+        if use_fused_kernel:
+            from repro.kernels.ops import gossip_axpy
+            return gossip_axpy(ops, w, interpret=interpret)
+        acc = w[0] * ops[0]
+        for k in range(1, K):
+            acc = acc + w[k] * ops[k]
+        return acc
+
+    combine = shard_map(combine_body, mesh, (P(), P(None, axis0)), P(axis0))
+
+    def complete(payloads, step=0):
+        return combine(w_table[step % sched.period], payloads)
+
+    return issue, complete

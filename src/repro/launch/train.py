@@ -20,7 +20,8 @@ from repro.configs.base import RunConfig
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.train import (build_train_step, bus_layout_for, checkpoint,
-                         init_state, make_gossip_schedule, use_packed_bus)
+                         init_state, make_gossip_schedule, use_overlap,
+                         use_packed_bus)
 
 
 def main():
@@ -60,6 +61,12 @@ def main():
                          "state in one (A, rows, 128) superbuffer — one "
                          "edm_update launch and one ppermute per gossip "
                          "term per step.  Default: on for edm + ppermute")
+    ap.add_argument("--overlap", default="off", choices=["off", "delayed"],
+                    help="overlapped gossip pipeline (DESIGN §6): 'delayed' "
+                         "issues the double-buffered payload's permutes "
+                         "before the backward pass and combines after it "
+                         "(one-step-stale mixing; needs the packed bus), "
+                         "'off' keeps gossip synchronous")
     ap.add_argument("--alpha", type=float, default=0.2)
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--phi", type=float, default=0.2,
@@ -77,7 +84,8 @@ def main():
                     gossip_period=args.gossip_period,
                     gossip_seed=args.gossip_seed,
                     agents_per_device=args.agents_per_device,
-                    packed_bus=args.packed_bus, remat=False)
+                    packed_bus=args.packed_bus, overlap=args.overlap,
+                    remat=False)
     sched = make_gossip_schedule(run, args.agents, pods=args.pods)
     mesh = agent_axes = None
     if args.gossip_engine == "ppermute":
@@ -95,7 +103,8 @@ def main():
           f"λ_prod={stats['lambda']:.4f} "
           f"alg={args.algorithm} engine={args.gossip_engine}"
           f"{' +fused' if args.fused_kernel else ''}"
-          f"{' +bus' if use_packed_bus(run) else ''}")
+          f"{' +bus' if use_packed_bus(run) else ''}"
+          f"{' +overlap' if use_overlap(run) else ''}")
 
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        n_agents=args.agents, phi=args.phi)
@@ -130,7 +139,9 @@ def main():
     if args.ckpt:
         layout = (bus_layout_for(model, args.agents)
                   if use_packed_bus(run) else None)
-        checkpoint.save(args.ckpt, state["params"], layout=layout)
+        # full resumable state (params + opt + step + pipeline), stored as
+        # logical trees — layout- and overlap-mode-independent on disk
+        checkpoint.save_state(args.ckpt, state, layout=layout)
         print(f"checkpoint -> {args.ckpt}")
 
 

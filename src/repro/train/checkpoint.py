@@ -6,6 +6,13 @@ buffer.  A bus-resident train state (``RunConfig.packed_bus``) is unpacked
 on save and re-packed on load via the ``layout=`` argument, so checkpoints
 are interchangeable between bus and tree-resident runs and survive layout
 changes (block-row retuning, dtype-policy changes) across restarts.
+
+The overlapped pipeline's state (DESIGN §6) follows the same rule:
+:func:`save_state` normalizes the double-buffered ``pipeline`` to its LIVE
+payload (``slot[parity]``, stored as a logical tree) plus the parity bit —
+the dead slot is never serialized, and :func:`load_state` re-materializes a
+``slot[2]`` whose live slot holds φ(t), so a resumed run reproduces the
+pipeline trajectory exactly.
 """
 from __future__ import annotations
 
@@ -15,7 +22,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "load"]
+__all__ = ["save", "load", "save_state", "load_state"]
 
 _SEP = "|"
 
@@ -38,17 +45,28 @@ def _flatten_keys(tree: Any):
     return keys, [leaf for _, leaf in flat]
 
 
+def _is_bus(leaf: Any, layout) -> bool:
+    """A leaf is a packed-bus buffer iff it is ``(..A.., rows, 128)``-shaped
+    for this layout — anything else (step counters, parity bits) passes
+    through the bus translation untouched."""
+    from repro.core.bus import LANE
+    shape = tuple(getattr(leaf, "shape", ()))
+    return len(shape) == 3 and shape[-2:] == (layout.rows, LANE)
+
+
 def _unbus(tree: Any, layout) -> Any:
     """Expand every (A, rows, 128) bus leaf of ``tree`` into its logical
-    subtree (tree may be one bus buffer, or e.g. a {"m","psi"} dict of them)."""
+    subtree (tree may be one bus buffer, or e.g. a {"m","psi"} dict of
+    them); non-bus leaves (scalars like ``step``) pass through."""
     from repro.core.bus import unpack_tree
-    return jax.tree.map(lambda b: unpack_tree(layout, b), tree)
+    return jax.tree.map(
+        lambda b: unpack_tree(layout, b) if _is_bus(b, layout) else b, tree)
 
 
 def save(path: str, tree: Any, layout: Optional[Any] = None) -> None:
-    """Save ``tree`` as .npz.  ``layout`` marks ``tree``'s array leaves as
-    packed-bus buffers (:class:`~repro.core.bus.BusLayout`): they are
-    unpacked to the logical tree first, keeping the on-disk format
+    """Save ``tree`` as .npz.  ``layout`` marks ``tree``'s bus-shaped array
+    leaves as packed-bus buffers (:class:`~repro.core.bus.BusLayout`): they
+    are unpacked to the logical tree first, keeping the on-disk format
     layout-independent."""
     if layout is not None:
         tree = _unbus(tree, layout)
@@ -60,9 +78,10 @@ def save(path: str, tree: Any, layout: Optional[Any] = None) -> None:
 def load(path: str, like: Any, layout: Optional[Any] = None) -> Any:
     """Restore into the structure of ``like`` (dtypes/shapes validated).
 
-    With ``layout=``, ``like``'s leaves are packed-bus buffers: the
-    checkpoint (stored logical, see :func:`save`) is loaded against the
-    unpacked structure and re-packed into bus layout on the way out.
+    With ``layout=``, ``like``'s bus-shaped leaves are packed-bus buffers:
+    the checkpoint (stored logical, see :func:`save`) is loaded against the
+    unpacked structure and re-packed into bus layout on the way out;
+    non-bus leaves load as-is.
     """
     if layout is not None:
         from repro.core.bus import pack_tree
@@ -70,8 +89,10 @@ def load(path: str, like: Any, layout: Optional[Any] = None) -> Any:
         template = jax.eval_shape(lambda t: _unbus(t, layout), like)
         logical = load(path, template)
         return jax.tree.map(
-            lambda b, sub: pack_tree(layout, sub), like, logical,
-            is_leaf=lambda x: hasattr(x, "ndim") and getattr(x, "ndim", 0) == 3)
+            lambda b, sub: pack_tree(layout, sub) if _is_bus(b, layout)
+            else sub,
+            like, logical,
+            is_leaf=lambda x: _is_bus(x, layout))
     data = np.load(path)
     keys, refs = _flatten_keys(like)
     leaves = []
@@ -81,3 +102,47 @@ def load(path: str, like: Any, layout: Optional[Any] = None) -> Any:
         leaves.append(got)
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
+
+
+# ---------------------------------------------------------------------------
+# full TrainState checkpoints (params + opt + step [+ overlap pipeline])
+# ---------------------------------------------------------------------------
+
+def save_state(path: str, state: Any, layout: Optional[Any] = None) -> None:
+    """Checkpoint a full trainer ``state`` dict.  Bus-resident slots unpack
+    to logical trees per the format note; the overlap ``pipeline`` is
+    normalized to ``{"phi": live payload, "parity": bit}`` — the spare slot
+    is dead by construction and never hits disk."""
+    tree = dict(state)
+    pipe = tree.pop("pipeline", None)
+    if pipe is not None:
+        parity = np.asarray(jax.device_get(pipe["parity"]))
+        live = np.asarray(jax.device_get(pipe["slot"]))[int(parity)]
+        tree["pipeline"] = {"phi": live, "parity": parity}
+    save(path, tree, layout=layout)
+
+
+def load_state(path: str, like: Any, layout: Optional[Any] = None) -> Any:
+    """Restore a full trainer state into the structure of ``like`` (the
+    freshly built state of the resuming run).  Pipeline checkpoints carry
+    only the live payload: the restored ``slot[2]`` holds φ(t) in BOTH
+    slots, so ``slot[parity]`` is correct for any stored parity and the
+    first resumed step overwrites the spare exactly as the uninterrupted
+    run would."""
+    import jax.numpy as jnp
+
+    like2 = dict(like)
+    pipe_like = like2.pop("pipeline", None)
+    if pipe_like is not None:
+        slot = pipe_like["slot"]
+        like2["pipeline"] = {
+            "phi": jax.ShapeDtypeStruct(tuple(slot.shape[1:]), slot.dtype),
+            "parity": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    tree = load(path, like2, layout=layout)
+    if pipe_like is not None:
+        pp = tree.pop("pipeline")
+        phi = jnp.asarray(pp["phi"])
+        tree["pipeline"] = {"slot": jnp.stack([phi, phi]),
+                            "parity": jnp.asarray(pp["parity"], jnp.int32)}
+    return tree

@@ -21,16 +21,18 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import (GossipSchedule, StaticSchedule, Topology,
                         accumulate_f32, make_edm_bus, make_mixer,
-                        make_optimizer, make_schedule, make_schedule_mixer)
+                        make_optimizer, make_overlap_mixer, make_schedule,
+                        make_schedule_mixer)
 from repro.core import bus as parambus
-from repro.core.metrics import consensus_distance
+from repro.core.metrics import bus_consensus, bus_grad_norm, consensus_distance
 from repro.models.api import Model
+from repro.optim import scale_grads, warmup_cosine
 
 __all__ = [
     "TrainState", "build_train_step", "init_state", "state_specs",
     "make_topology", "make_gossip_schedule", "gossip_round_step",
     "prepend_agent_axis", "batch_spec_tree", "use_packed_bus",
-    "bus_layout_for",
+    "use_overlap", "bus_layout_for",
 ]
 
 
@@ -98,6 +100,29 @@ def use_packed_bus(run: RunConfig) -> bool:
             and run.agents == "data")
 
 
+def use_overlap(run: RunConfig) -> bool:
+    """Resolve ``RunConfig.overlap`` (DESIGN §6).  ``"delayed"`` runs the
+    overlapped gossip pipeline: the live payload's permutes are issued
+    before the backward pass and combined after it (one-step-stale mixing).
+    It composes only with the configurations in the §6 fallback matrix —
+    packed bus (the payload must be ONE buffer), ``gossip_every == 1``
+    (the pipeline always has a payload in flight) and an f32 wire."""
+    if run.overlap in ("off", "", None):
+        return False
+    assert run.overlap == "delayed", \
+        f"RunConfig.overlap must be 'off' or 'delayed', got {run.overlap!r}"
+    assert use_packed_bus(run), \
+        "overlap='delayed' needs the packed bus (DESIGN §6): the in-flight " \
+        "payload is one (A, rows, 128) buffer, not a leaf set"
+    assert run.gossip_every == 1, \
+        "overlap='delayed' composes with gossip_every=1 only (the pipeline " \
+        "keeps a payload in flight every step)"
+    assert run.gossip_dtype in ("float32", "", None), \
+        "overlap='delayed' ships the f32 bus payload (cast-on-wire is a " \
+        "synchronous-path lever; see DESIGN §6 fallback matrix)"
+    return True
+
+
 def bus_layout_for(model: Model, n_agents: int) -> parambus.BusLayout:
     """Cached bus layout of ``model``'s parameter tree with a leading agent
     axis — the single layout object shared by ``init_state``, the train
@@ -142,14 +167,26 @@ def build_train_step(model: Model, run: RunConfig, topo,
     loss/grad, the EDM update is ONE kernel over the whole bus and the
     gossip ships one payload per term.  Jit the returned function with
     ``donate_argnums=(0,)`` so XLA aliases the bus buffers in place.
+
+    With ``run.overlap="delayed"`` (:func:`use_overlap`, DESIGN §6) the
+    step is restructured into **issue → compute → complete** phases: the
+    live double-buffered payload φ(t) (``state["pipeline"]``) has its
+    gossip permutes issued *before* the backward pass, gradients are
+    evaluated at the pre-mix iterate φ(t) (the one-step-stale-mixing
+    variant of EDM), and the combine + EDM update run after — so the wire
+    sits in the backward pass's shadow instead of on the critical path.
+    ``overlap="off"`` is bit-identical to the synchronous bus step.
     """
     sched = topo if isinstance(topo, GossipSchedule) else StaticSchedule(topo)
-    base_mix = make_schedule_mixer(
-        sched, engine=run.gossip_engine, mesh=mesh, agent_axes=agent_axes,
-        use_fused_kernel=use_fused_kernel)
+    overlap = use_overlap(run)
     kw = dict(use_fused_kernel=use_fused_kernel) if run.algorithm == "edm" else {}
     packed = use_packed_bus(run)
     layout = bus_layout_for(model, sched.n_agents) if packed else None
+    base_mix = None
+    if not overlap:
+        base_mix = make_schedule_mixer(
+            sched, engine=run.gossip_engine, mesh=mesh, agent_axes=agent_axes,
+            use_fused_kernel=use_fused_kernel)
 
     def opt_at(step, mix_override=None):
         """Algorithm with the mixer bound to ``step``'s gossip round (the
@@ -173,17 +210,61 @@ def build_train_step(model: Model, run: RunConfig, topo,
 
     lr_sched = None
     if run.warmup_steps or run.total_steps:
-        from repro.optim import warmup_cosine
         lr_sched = warmup_cosine(run.warmup_steps or 1,
                                  run.total_steps or 10**9)
+
+    def scaled_grads(grads, step):
+        """LR schedule as gradient scaling — the one call site both the
+        synchronous and the overlapped step share."""
+        if lr_sched is None:
+            return grads
+        return scale_grads(grads, step, lr_sched)
+
+    if overlap:
+        issue, complete = make_overlap_mixer(
+            sched, engine=run.gossip_engine, mesh=mesh,
+            agent_axes=agent_axes, use_fused_kernel=use_fused_kernel)
+        # the delayed pipeline mixes FIRST (the in-flight payload), then
+        # runs the local EDM recursion on the mixed iterate — so the
+        # optimizer's own mix is the identity and the wire lives in the
+        # issue/complete phases around the backward pass.
+        local_opt = make_edm_bus(run.alpha, run.beta, mix=lambda t: t,
+                                 block_rows=layout.block_rows,
+                                 use_fused_kernel=use_fused_kernel)
+
+        def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+            pipe = state["pipeline"]
+            phi = parambus.pipeline_payload(pipe)
+            g_step = state["step"]          # gossip_every == 1 under overlap
+            # ISSUE: put the round's permutes of φ(t) on the wire — nothing
+            # below until `complete` depends on them.
+            payloads = issue(phi, g_step)
+            # COMPUTE: gradients at the pre-mix local iterate φ(t); the
+            # whole fwd/bwd is independent of the in-flight permutes.
+            params_tree = parambus.unpack_tree(layout, phi)
+            losses, grads = grad_fn(params_tree, batch)
+            grads = scaled_grads(grads, state["step"])
+            g_bus = parambus.pack_tree(layout, grads)
+            # COMPLETE: weighted combine of the landed payloads, then the
+            # bus-resident EDM update on the mixed iterate x(t) = W(t) φ(t).
+            x_mixed = complete(payloads, g_step)
+            phi_new, new_opt = local_opt.step(x_mixed, g_bus, state["opt"])
+            metrics = {
+                "loss": jnp.mean(losses),
+                "consensus": bus_consensus(x_mixed),
+                "grad_norm": bus_grad_norm(g_bus),
+            }
+            return {"params": x_mixed, "opt": new_opt,
+                    "pipeline": parambus.pipeline_advance(pipe, phi_new),
+                    "step": state["step"] + 1}, metrics
+
+        return train_step
 
     def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
         params_tree = (parambus.unpack_tree(layout, state["params"])
                        if packed else state["params"])
         losses, grads = grad_fn(params_tree, batch)
-        if lr_sched is not None:
-            from repro.optim import scale_grads
-            grads = scale_grads(grads, state["step"], lr_sched)
+        grads = scaled_grads(grads, state["step"])
         g_step = gossip_round_step(state["step"], run.gossip_every)
         g_in = parambus.pack_tree(layout, grads) if packed else grads
         opt = opt_at(g_step)
@@ -202,12 +283,20 @@ def build_train_step(model: Model, run: RunConfig, topo,
                 (state["params"], g_in, state["opt"]))
         else:
             new_params, new_opt = opt.step(state["params"], g_in, state["opt"])
+        if packed:
+            # bus-path metrics: ONE fused reduction over each superbuffer
+            # (pads are zero, so these equal the per-leaf reductions).
+            consensus = bus_consensus(new_params)
+            grad_norm = bus_grad_norm(g_in)
+        else:
+            consensus = consensus_distance(new_params)
+            grad_norm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
         metrics = {
             "loss": jnp.mean(losses),
-            "consensus": consensus_distance(new_params),
-            "grad_norm": jnp.sqrt(sum(
-                jnp.sum(jnp.square(g.astype(jnp.float32)))
-                for g in jax.tree.leaves(grads))),
+            "consensus": consensus,
+            "grad_norm": grad_norm,
         }
         return {"params": new_params, "opt": new_opt,
                 "step": state["step"] + 1}, metrics
@@ -221,7 +310,11 @@ def init_state(model: Model, run: RunConfig, n_agents: int, key) -> TrainState:
     With the packed bus active the state is packed ONCE here (DESIGN §5):
     ``params`` is the ``(A, rows, 128)`` superbuffer and ``opt`` holds the
     bus-resident ``m``/``psi``; everything downstream stays in bus layout
-    until checkpointing.
+    until checkpointing.  The overlapped pipeline (DESIGN §6) additionally
+    carries ``pipeline`` — the double-buffered payload ``slot[2]`` with its
+    parity bit, seeded with φ(0) = x(0) in the live slot (step 0 then
+    reproduces the synchronous step exactly: W x(0) = x(0) at a replicated
+    init).
     """
     params1 = model.init(key)
     params = jax.tree.map(
@@ -231,8 +324,11 @@ def init_state(model: Model, run: RunConfig, n_agents: int, key) -> TrainState:
         x_bus = parambus.pack_tree(layout, params)
         opt = make_edm_bus(run.alpha, run.beta, mix=lambda t: t,
                            block_rows=layout.block_rows)
-        return {"params": x_bus, "opt": opt.init(x_bus),
-                "step": jnp.zeros((), jnp.int32)}
+        state = {"params": x_bus, "opt": opt.init(x_bus),
+                 "step": jnp.zeros((), jnp.int32)}
+        if use_overlap(run):
+            state["pipeline"] = parambus.make_pipeline(x_bus)
+        return state
     mix = make_mixer(make_topology(run, n_agents))
     opt = make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta, mix=mix)
     return {"params": params, "opt": opt.init(params),
@@ -268,7 +364,13 @@ def state_specs(model: Model, run: RunConfig, multi_pod: bool) -> Dict[str, Any]
         # rows/lane replicated (the bus has no weight dim to FSDP-shard).
         agent_axis = ("pod", "data") if multi_pod else "data"
         spec = P(agent_axis)
-        return {"params": spec, "opt": {"m": spec, "psi": spec}, "step": P()}
+        specs = {"params": spec, "opt": {"m": spec, "psi": spec},
+                 "step": P()}
+        if use_overlap(run):
+            # slot: (2, A, rows, 128) — the 2-slot dim replicated, agent
+            # axis sharded on dim 1; parity is a replicated scalar.
+            specs["pipeline"] = {"slot": P(None, agent_axis), "parity": P()}
+        return specs
 
     base = model.param_specs()
 

@@ -1,0 +1,470 @@
+"""Overlapped gossip pipeline (DESIGN §6): double-buffered payload slots,
+issue/complete phase split, delayed-mixing semantics, checkpoint resume.
+
+* ``overlap="off"`` is bit-identical to the synchronous packed-bus step
+  (fused and unfused) — threading the flag changed nothing;
+* ``overlap="delayed"`` step 0 equals the synchronous step exactly
+  (W x(0) = x(0) at a replicated init) and the full trainer matches a
+  hand-rolled delayed-EDM reference;
+* the phase-split overlap mixer equals the synchronous schedule mixer
+  payload-for-payload on the real ppermute engine (8-device subprocess),
+  and a delayed ppermute train step still compiles to exactly one
+  collective-permute per nonzero gossip term;
+* pipeline checkpoints (live slot + parity) round-trip: a resumed run
+  reproduces the uninterrupted trajectory;
+* bus-path metrics (one fused reduction) equal the per-leaf reductions;
+* the ring-DMA transport is only selected on a real TPU — ``ring_plan``
+  extraction and the CPU fallback are pinned here.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import bus, metrics, ring
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train import (build_train_step, checkpoint, init_state,
+                         make_gossip_schedule, state_specs, use_overlap)
+
+jax.config.update("jax_enable_x64", False)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ,
+       "PYTHONPATH": os.path.join(REPO, "src")
+       + (os.pathsep + os.environ["PYTHONPATH"]
+          if os.environ.get("PYTHONPATH") else "")}
+
+A = 4
+
+
+def _model():
+    cfg = ModelConfig(name="ov-tiny", family="dense", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32")
+    return build_model(cfg)
+
+
+def _batch(model):
+    return SyntheticLM(vocab_size=model.cfg.vocab_size, seq_len=8,
+                       n_agents=A).sample(jax.random.PRNGKey(1), 1)
+
+
+def _run(overlap="off", **kw):
+    return RunConfig(global_batch=A, seq_len=8, algorithm="edm", alpha=0.1,
+                     gossip_engine="dense", packed_bus=True,
+                     overlap=overlap, remat=False, **kw)
+
+
+def _steps(model, batch, run, n, fused=False, key=0):
+    sched = make_gossip_schedule(run, A)
+    state = init_state(model, run, A, jax.random.PRNGKey(key))
+    step = jax.jit(build_train_step(model, run, sched,
+                                    use_fused_kernel=fused))
+    traj = []
+    for _ in range(n):
+        state, m = step(state, batch)
+        traj.append(m)
+    return state, traj
+
+
+# ---------------------------------------------------------------------------
+# config resolution + pipeline slot mechanics
+# ---------------------------------------------------------------------------
+
+def test_overlap_resolution():
+    assert not use_overlap(RunConfig())
+    assert not use_overlap(RunConfig(overlap="off"))
+    assert use_overlap(RunConfig(algorithm="edm", packed_bus=True,
+                                 overlap="delayed"))
+    # auto-bus production combo resolves too
+    assert use_overlap(RunConfig(algorithm="edm", gossip_engine="ppermute",
+                                 overlap="delayed"))
+    with pytest.raises(AssertionError):   # needs the packed bus
+        use_overlap(RunConfig(algorithm="edm", gossip_engine="shifts",
+                              overlap="delayed"))
+    with pytest.raises(AssertionError):   # gossip_every must be 1
+        use_overlap(RunConfig(algorithm="edm", packed_bus=True,
+                              overlap="delayed", gossip_every=2))
+    with pytest.raises(AssertionError):   # f32 wire only
+        use_overlap(RunConfig(algorithm="edm", packed_bus=True,
+                              overlap="delayed", gossip_dtype="bfloat16"))
+    with pytest.raises(AssertionError):   # unknown mode
+        use_overlap(RunConfig(algorithm="edm", packed_bus=True,
+                              overlap="async"))
+
+
+def test_pipeline_slot_semantics():
+    b0 = jnp.arange(2 * 16 * 128, dtype=jnp.float32).reshape(2, 16, 128)
+    pipe = bus.make_pipeline(b0)
+    assert pipe["slot"].shape == (2, 2, 16, 128)
+    assert int(pipe["parity"]) == 0
+    np.testing.assert_array_equal(np.asarray(bus.pipeline_payload(pipe)),
+                                  np.asarray(b0))
+    # advance writes the spare slot and flips the bit; the old live slot's
+    # contents stay where they were (the double buffer)
+    b1 = b0 + 1.0
+    pipe2 = bus.pipeline_advance(pipe, b1)
+    assert int(pipe2["parity"]) == 1
+    np.testing.assert_array_equal(np.asarray(bus.pipeline_payload(pipe2)),
+                                  np.asarray(b1))
+    np.testing.assert_array_equal(np.asarray(pipe2["slot"][0]),
+                                  np.asarray(b0))
+    pipe3 = bus.pipeline_advance(pipe2, b0 + 2.0)
+    assert int(pipe3["parity"]) == 0
+    np.testing.assert_array_equal(np.asarray(bus.pipeline_payload(pipe3)),
+                                  np.asarray(b0 + 2.0))
+    # the mechanics are jit-clean
+    jpipe = jax.jit(lambda p, x: bus.pipeline_advance(p, x))(pipe, b1)
+    np.testing.assert_array_equal(np.asarray(bus.pipeline_payload(jpipe)),
+                                  np.asarray(b1))
+
+
+# ---------------------------------------------------------------------------
+# fused bus metrics == per-leaf reductions
+# ---------------------------------------------------------------------------
+
+def test_bus_metrics_match_tree():
+    tree = {
+        "a": jax.random.normal(jax.random.PRNGKey(0), (A, 17, 9)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (A, 131)),
+    }
+    layout = bus.make_layout(tree, block_rows=8)
+    packed = bus.pack_tree(layout, tree)
+    want_norm = jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                             for l in jax.tree.leaves(tree)))
+    np.testing.assert_allclose(float(metrics.bus_grad_norm(packed)),
+                               float(want_norm), rtol=1e-6)
+    np.testing.assert_allclose(float(metrics.bus_consensus(packed)),
+                               float(metrics.consensus_distance(tree)),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# overlap="off" is bit-identical to the plain packed-bus step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", [False, True], ids=["unfused", "fused"])
+def test_overlap_off_bit_identical(fused):
+    model = _model()
+    batch = _batch(model)
+    s_def, t_def = _steps(model, batch, _run(), 8, fused=fused)
+    s_off, t_off = _steps(model, batch, _run(overlap="off"), 8, fused=fused)
+    for md, mo in zip(t_def, t_off):
+        assert float(md["loss"]) == float(mo["loss"])
+    np.testing.assert_array_equal(np.asarray(s_def["params"]),
+                                  np.asarray(s_off["params"]))
+    np.testing.assert_array_equal(np.asarray(s_def["opt"]["psi"]),
+                                  np.asarray(s_off["opt"]["psi"]))
+
+
+# ---------------------------------------------------------------------------
+# delayed == hand-rolled one-step-stale-mixing reference
+# ---------------------------------------------------------------------------
+
+def test_delayed_matches_reference():
+    model = _model()
+    batch = _batch(model)
+    run = _run(overlap="delayed")
+    alpha, beta = run.alpha, run.beta
+    state, traj = _steps(model, batch, run, 4)
+
+    # reference: explicit delayed recursion on the logical tree with the
+    # dense oracle W — grads at φ(t), combine of the in-flight φ(t), then
+    # the local EDM update on the mixed iterate.
+    from repro.core import make_mixer
+    from repro.train import make_topology
+    topo = make_topology(run, A)
+    mix = make_mixer(topo, "dense")
+    grad_fn = jax.vmap(jax.value_and_grad(
+        lambda p, b: model.loss(p, b, remat=False, remat_policy="full")))
+    params1 = model.init(jax.random.PRNGKey(0))
+    phi = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (A,) + l.shape), params1)
+    m_st = jax.tree.map(jnp.zeros_like, phi)
+    psi = phi
+    ref_losses = []
+    for _ in range(4):
+        x = mix(phi)
+        losses, g = grad_fn(phi, batch)
+        ref_losses.append(float(jnp.mean(losses)))
+        m_st = jax.tree.map(lambda m, gg: beta * m + (1 - beta) * gg, m_st, g)
+        psi_new = jax.tree.map(lambda xx, mm: xx - alpha * mm, x, m_st)
+        phi = jax.tree.map(lambda pn, xx, ps: pn + xx - ps, psi_new, x, psi)
+        psi = psi_new
+
+    np.testing.assert_allclose([float(m["loss"]) for m in traj], ref_losses,
+                               rtol=1e-5, atol=1e-6)
+    from repro.train import bus_layout_for
+    layout = bus_layout_for(model, A)
+    got_phi = bus.unpack_tree(layout, bus.pipeline_payload(state["pipeline"]))
+    for w, g in zip(jax.tree.leaves(phi), jax.tree.leaves(got_phi)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+    # params is the mixed iterate x(t) = W φ(t) of the last step
+    got_x = bus.unpack_tree(layout, state["params"])
+    for w, g in zip(jax.tree.leaves(x), jax.tree.leaves(got_x)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_delayed_step0_and_envelope():
+    """Step 0 of the delayed pipeline equals the synchronous step exactly;
+    later losses stay in the synchronous [loss(t+1), loss(t)] envelope
+    (the pre-mix iterate sits between x(t) and x(t+1))."""
+    model = _model()
+    batch = _batch(model)
+    _, t_off = _steps(model, batch, _run(), 9)
+    _, t_del = _steps(model, batch, _run(overlap="delayed"), 8)
+    lo = [float(m["loss"]) for m in t_off]
+    ld = [float(m["loss"]) for m in t_del]
+    assert abs(lo[0] - ld[0]) < 1e-6
+    for t in range(8):
+        lo_t, hi_t = sorted((lo[t], lo[t + 1]))
+        tol = 0.05 * abs(lo[t])
+        assert lo_t - tol <= ld[t] <= hi_t + tol, (t, ld[t], lo_t, hi_t)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: pipeline state (parity + live slot) round-trips (satellite)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_pipeline_roundtrip(tmp_path):
+    """Resume at step t reproduces the uninterrupted delayed trajectory —
+    including an ODD parity checkpoint (live payload in slot 1)."""
+    from repro.train import bus_layout_for
+
+    model = _model()
+    batch = _batch(model)
+    run = _run(overlap="delayed")
+    layout = bus_layout_for(model, A)
+    sched = make_gossip_schedule(run, A)
+    step = jax.jit(build_train_step(model, run, sched))
+
+    state = init_state(model, run, A, jax.random.PRNGKey(0))
+    mids = []
+    for t in range(6):
+        if t == 3:
+            mids.append(jax.tree.map(lambda x: np.asarray(x), state))
+        state, m = step(state, batch)
+    assert int(mids[0]["pipeline"]["parity"]) == 1  # odd-parity snapshot
+
+    path = str(tmp_path / "pipe.npz")
+    checkpoint.save_state(path, mids[0], layout=layout)
+    like = init_state(model, run, A, jax.random.PRNGKey(0))
+    restored = checkpoint.load_state(path, like, layout=layout)
+    assert int(restored["step"]) == 3
+    np.testing.assert_allclose(
+        np.asarray(bus.pipeline_payload(restored["pipeline"])),
+        np.asarray(bus.pipeline_payload(
+            {k: jnp.asarray(v) for k, v in mids[0]["pipeline"].items()})),
+        rtol=0, atol=0)
+
+    resumed = restored
+    for _ in range(3):
+        resumed, mr = step(resumed, batch)
+    np.testing.assert_allclose(np.asarray(resumed["params"]),
+                               np.asarray(state["params"]),
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(
+        np.asarray(bus.pipeline_payload(resumed["pipeline"])),
+        np.asarray(bus.pipeline_payload(state["pipeline"])),
+        rtol=0, atol=0)
+
+
+def test_full_state_checkpoint_without_pipeline(tmp_path):
+    """save_state/load_state also round-trip a synchronous bus state (no
+    pipeline key) and keep the on-disk format logical."""
+    from repro.train import bus_layout_for
+
+    model = _model()
+    batch = _batch(model)
+    run = _run()
+    layout = bus_layout_for(model, A)
+    sched = make_gossip_schedule(run, A)
+    step = jax.jit(build_train_step(model, run, sched))
+    state = init_state(model, run, A, jax.random.PRNGKey(0))
+    for _ in range(2):
+        state, _ = step(state, batch)
+    path = str(tmp_path / "sync.npz")
+    checkpoint.save_state(path, state, layout=layout)
+    like = init_state(model, run, A, jax.random.PRNGKey(0))
+    restored = checkpoint.load_state(path, like, layout=layout)
+    np.testing.assert_array_equal(np.asarray(restored["params"]),
+                                  np.asarray(state["params"]))
+    assert int(restored["step"]) == 2
+
+
+def test_state_specs_pipeline():
+    from jax.sharding import PartitionSpec as P
+
+    model = _model()
+    run = _run(overlap="delayed")
+    state = jax.eval_shape(
+        lambda: init_state(model, run, A, jax.random.PRNGKey(0)))
+    specs = state_specs(model, run, multi_pod=False)
+    jax.tree.map(lambda sds, sp: None, state, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+    assert specs["pipeline"]["slot"] == P(None, "data")
+    assert specs["pipeline"]["parity"] == P()
+    assert state["pipeline"]["slot"].ndim == 4
+
+
+# ---------------------------------------------------------------------------
+# ring-DMA transport: plan extraction + CPU fallback
+# ---------------------------------------------------------------------------
+
+def test_ring_plan_and_fallback():
+    from repro.core import exp_graph, hierarchical
+    from repro.kernels import ring_dma
+
+    topo = ring(8)
+    plan = ring_dma.ring_plan(topo)
+    assert plan is not None
+    w_c, w_l, w_r = plan
+    # weights must re-assemble the topology's terms exactly
+    np.testing.assert_allclose(w_c + w_l + w_r, 1.0, rtol=1e-6)
+    W = topo.dense_matrix()
+    np.testing.assert_allclose(w_c, W[0, 0], rtol=1e-6)
+    np.testing.assert_allclose(w_l, W[1, 0], rtol=1e-6)   # from-left edge
+    np.testing.assert_allclose(w_r, W[0, 1], rtol=1e-6)   # from-right edge
+    assert ring_dma.ring_plan(exp_graph(8)) is None
+    assert ring_dma.ring_plan(hierarchical(2, 4)) is None
+    # ring(2): ±1 coincide (shift 1 ≡ −1 mod 2) — still a valid plan
+    assert ring_dma.ring_plan(ring(2)) is not None
+
+    # off-TPU the transport is never supported → ppermute fallback
+    assert not ring_dma.on_tpu()
+    assert not ring_dma.ring_dma_supported(topo)
+    assert ring_dma.ring_dma_supported(topo, backend="tpu")
+    assert not ring_dma.ring_dma_supported(topo, n_axes=2, backend="tpu")
+    assert not ring_dma.ring_dma_supported(topo, B=4, backend="tpu")
+    assert not ring_dma.ring_dma_supported(exp_graph(8), backend="tpu")
+
+
+def test_ring_dma_transport_forced_asserts_off_tpu():
+    """transport='ring_dma' must refuse to silently fall back."""
+    from repro.core import make_mixer
+    from repro.launch.mesh import make_sim_mesh
+
+    mesh = make_sim_mesh()
+    mix = make_mixer(ring(1), "ppermute", mesh=mesh, agent_axes="data",
+                     transport="ring_dma")
+    with pytest.raises(AssertionError):
+        mix({"w": jnp.ones((1, 8, 128))})
+
+
+# ---------------------------------------------------------------------------
+# ppermute engine: overlap mixer == schedule mixer + HLO permute count
+# (8-device subprocess)
+# ---------------------------------------------------------------------------
+
+_PPERMUTE_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import (RoundRobinExp, StaticSchedule, make_overlap_mixer,
+                        make_schedule_mixer, ring, exp_graph)
+from repro.data import SyntheticLM
+from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
+from repro.models import build_model
+from repro.train import build_train_step, init_state, make_gossip_schedule
+
+A = 8
+mesh = make_gossip_mesh(A)
+axes = gossip_agent_axes(mesh)
+x = jax.device_put(jax.random.normal(jax.random.PRNGKey(0), (A, 64, 128)),
+                   NamedSharding(mesh, P(axes)))
+for sched in (StaticSchedule(ring(A)), StaticSchedule(exp_graph(A)),
+              RoundRobinExp(A)):
+    for fused in (False, True):
+        mix = make_schedule_mixer(sched, "ppermute", mesh=mesh,
+                                  agent_axes=axes, use_fused_kernel=fused)
+        issue, complete = make_overlap_mixer(sched, "ppermute", mesh=mesh,
+                                             agent_axes=axes,
+                                             use_fused_kernel=fused)
+        f = jax.jit(lambda x, s: complete(issue(x, s), s))
+        for s in range(sched.period):
+            np.testing.assert_allclose(
+                np.asarray(f(x, s)), np.asarray(mix(x, step=s)),
+                rtol=1e-6, atol=1e-6,
+                err_msg=f"{sched.name} fused={fused} step={s}")
+print("OVERLAP_MIXER_OK")
+
+cfg = ModelConfig(name="ov-pp", family="dense", n_layers=1, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  dtype="float32")
+model = build_model(cfg)
+batch = SyntheticLM(vocab_size=64, seq_len=8, n_agents=A).sample(
+    jax.random.PRNGKey(1), 1)
+
+def build(overlap):
+    run = RunConfig(global_batch=A, seq_len=8, algorithm="edm", alpha=0.05,
+                    gossip_engine="ppermute", packed_bus=True,
+                    overlap=overlap, remat=False)
+    sched = make_gossip_schedule(run, A)
+    state = init_state(model, run, A, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model, run, sched, mesh=mesh,
+                                    agent_axes=axes, use_fused_kernel=True),
+                   donate_argnums=(0,))
+    return state, step
+
+state, step = build("delayed")
+hlo = step.lower(state, batch).compile().as_text()
+n_perm = hlo.count("collective-permute(")
+assert n_perm == 2, ("delayed ring step must keep 1 permute/term", n_perm)
+print("OVERLAP_HLO_OK")
+
+s_d, step_d = build("delayed")
+s_o, step_o = build("off")
+ld, lo = [], []
+for t in range(9):
+    s_o, mo = step_o(s_o, batch); lo.append(float(mo["loss"]))
+    if t < 8:
+        s_d, md = step_d(s_d, batch); ld.append(float(md["loss"]))
+assert abs(ld[0] - lo[0]) < 1e-6
+for t in range(8):
+    lo_t, hi_t = sorted((lo[t], lo[t + 1]))
+    tol = 0.05 * abs(lo[t])
+    assert lo_t - tol <= ld[t] <= hi_t + tol, (t, ld[t], lo_t, hi_t)
+print("OVERLAP_PPERMUTE_OK")
+"""
+
+
+def test_overlap_ppermute_subprocess():
+    r = subprocess.run([sys.executable, "-c", _PPERMUTE_CODE], cwd=REPO,
+                       env=ENV, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    for marker in ("OVERLAP_MIXER_OK", "OVERLAP_HLO_OK",
+                   "OVERLAP_PPERMUTE_OK"):
+        assert marker in r.stdout, marker
+
+
+# ---------------------------------------------------------------------------
+# benchmarks: autotune + divergence gates smoke (subprocess, repo cwd)
+# ---------------------------------------------------------------------------
+
+def test_autotune_and_divergence_gates_smoke():
+    code = (
+        "from benchmarks.gossip_micro import autotune_block_rows, "
+        "overlap_divergence_gates\n"
+        "rows = autotune_block_rows(candidates=(128, 256), "
+        "rows_sizes=(256,), iters=2, verbose=False)\n"
+        "assert rows[0]['edm_update']['best'] in (128, 256)\n"
+        "assert rows[0]['gossip_axpy']['best'] in (128, 256)\n"
+        "gates = overlap_divergence_gates(verbose=False)\n"
+        "assert gates['quadratic']['ratio'] <= 2.0\n"
+        "assert gates['logistic']['ratio'] <= 1.05\n"
+        "print('GATES_OK')\n"
+    )
+    r = subprocess.run([sys.executable, "-c", code], cwd=REPO, env=ENV,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "GATES_OK" in r.stdout
