@@ -37,7 +37,14 @@ Three parts:
   grid-tile height over {128, 256, 512, 1024} for the fused EDM update and
   the 3-ary gossip combine across bus sizes and prints the argmin per size
   (the ROADMAP "tune BLOCK_ROWS" knob; wall-clock is interpret-mode on CPU
-  — re-run on a real TPU for the production number).
+  — re-run on a real TPU for the production number);
+* a **sharded vs gathered** gossip sweep (``--sharded``, DESIGN §7): the
+  row-sharded ``P('pod', 'data')`` bus vs the rows-replicated pre-§7
+  layout on a 2-pod × 4-shard host mesh — us/step and wire bytes/step
+  (per-device permute payload drops by the shard factor), with the
+  sharded == dense-oracle equivalence gate raising on divergence (the CI
+  contract of the ``pod-fsdp-smoke`` job).  Results land in
+  ``BENCH_shard.json``.
 
 CLI::
 
@@ -45,6 +52,7 @@ CLI::
     python -m benchmarks.gossip_micro --schedule all --block-rows 256
     python -m benchmarks.gossip_micro --e2e-step
     python -m benchmarks.gossip_micro --autotune-block-rows
+    python -m benchmarks.gossip_micro --sharded
 """
 from __future__ import annotations
 
@@ -60,9 +68,11 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(REPO, "BENCH_gossip.json")
 BENCH_EDM_JSON = os.path.join(REPO, "BENCH_edm_step.json")
 BENCH_OVERLAP_JSON = os.path.join(REPO, "BENCH_overlap.json")
+BENCH_SHARD_JSON = os.path.join(REPO, "BENCH_shard.json")
 _SWEEP_MARKER = "SWEEP_CSV_JSON:"
 _SCHED_MARKER = "SCHED_JSON:"
 _E2E_MARKER = "E2E_JSON:"
+_SHARD_MARKER = "SHARD_JSON:"
 
 
 def _sweep_cases():
@@ -452,22 +462,150 @@ def _e2e_loss_traj(model, batch, mesh, axes, A, overlap, steps: int = 8):
     return traj
 
 
-def _e2e_subprocess(iters: int = 6) -> dict:
-    """Run :func:`e2e_step_sweep` under an 8-device host platform."""
+def _bench_subprocess(argv: List[str], marker: str, devices: int,
+                      label: str, extra_env: Dict | None = None):
+    """Re-exec this module with a forced host-platform device count and
+    parse the marker-prefixed JSON line — the one subprocess wrapper
+    behind every multi-device sweep (XLA_FLAGS must be set before jax
+    initializes, so the sweeps cannot run in-process)."""
     env = {**os.environ,
-           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
            "PYTHONPATH": os.path.join(REPO, "src")
            + (os.pathsep + os.environ["PYTHONPATH"]
-              if os.environ.get("PYTHONPATH") else "")}
-    r = subprocess.run([sys.executable, "-m", "benchmarks.gossip_micro",
-                        "--e2e-inner", "--iters", str(iters)],
-                       cwd=REPO, env=env, capture_output=True, text=True,
-                       timeout=900)
+              if os.environ.get("PYTHONPATH") else ""),
+           **(extra_env or {})}
+    r = subprocess.run([sys.executable, "-m", "benchmarks.gossip_micro"]
+                       + argv, cwd=REPO, env=env, capture_output=True,
+                       text=True, timeout=900)
     for line in r.stdout.splitlines():
-        if line.startswith(_E2E_MARKER):
-            return json.loads(line[len(_E2E_MARKER):])
-    raise RuntimeError(f"e2e step sweep failed:\n{r.stdout[-2000:]}"
+        if line.startswith(marker):
+            return json.loads(line[len(marker):])
+    raise RuntimeError(f"{label} failed:\n{r.stdout[-2000:]}"
                        f"\n{r.stderr[-2000:]}")
+
+
+def _e2e_subprocess(iters: int = 6) -> dict:
+    """Run :func:`e2e_step_sweep` under an 8-device host platform."""
+    return _bench_subprocess(["--e2e-inner", "--iters", str(iters)],
+                             _E2E_MARKER, 8, "e2e step sweep")
+
+
+# ---------------------------------------------------------------------------
+# shard-resident gossip: sharded vs gathered (DESIGN §7)
+# ---------------------------------------------------------------------------
+
+SHARD_ROWS_SIZES = (2048, 8192, 16384)
+
+
+def sharded_sweep(iters: int = 20) -> List[dict]:
+    """Sharded vs gathered gossip on a 2-pod × 4-shard host mesh
+    (DESIGN §7): per bus size, us/step and wire bytes/step for
+
+    * ``sharded``  — the bus row-sharded ``P('pod', 'data')``; every
+      permute ships each shard's own ``rows/S`` block (shard-local);
+    * ``gathered`` — the pre-§7 composition: rows replicated over the
+      shard axis (``P('pod', None)``), so every shard ships the FULL
+      per-agent payload and the wire carries S× the bytes.
+
+    Includes the equivalence gate (sharded ppermute == dense oracle ==
+    shard-resident all-gather oracle — any divergence raises, the CI
+    contract for the pod-fsdp path).  Needs 8 host devices (use the
+    ``--sharded`` outer flag for the subprocess wrapper).
+    """
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import (make_mixer, mix_dense, mix_dense_sharded, ring)
+    from repro.launch.mesh import make_gossip_mesh
+    from .common import timeit_us
+
+    A, S = 2, 4
+    topo = ring(A)
+    n_perm = sum(1 for t in topo.terms if t.shift != 0)
+    mesh = make_gossip_mesh(A, pods=A, shards=S)
+    results = []
+    for rows in SHARD_ROWS_SIZES:
+        x = jax.random.normal(jax.random.PRNGKey(rows), (A, rows, 128))
+        want = np.asarray(mix_dense(topo, x))
+        for mode in ("sharded", "gathered"):
+            spec = P("pod", "data") if mode == "sharded" else P("pod")
+            xs = jax.device_put(x, NamedSharding(mesh, spec))
+            for fused in (False, True):
+                kw = dict(mesh=mesh, agent_axes="pod",
+                          use_fused_kernel=fused)
+                if mode == "sharded":
+                    kw["shard_axes"] = "data"
+                mix = jax.jit(make_mixer(topo, "ppermute", **kw))
+                # equivalence gate: both layouts must match the oracle
+                np.testing.assert_allclose(
+                    np.asarray(mix(xs)), want, rtol=1e-5, atol=1e-6,
+                    err_msg=f"sharded-gossip gate: {mode} fused={fused} "
+                            f"rows={rows} diverged from the dense oracle")
+                if mode == "sharded" and not fused:
+                    np.testing.assert_allclose(
+                        np.asarray(mix_dense_sharded(topo, mesh, "pod",
+                                                     "data", xs)),
+                        want, rtol=1e-5, atol=1e-6,
+                        err_msg=f"shard-resident oracle gate rows={rows}")
+                us = timeit_us(mix, xs, iters=iters)
+                rows_wire = rows // S if mode == "sharded" else rows
+                results.append({
+                    "mode": mode, "fused": fused, "agents": A, "shards": S,
+                    "rows": rows, "elems_per_agent": rows * 128,
+                    "us_per_step": round(us, 1),
+                    "permutes_per_step": n_perm,
+                    # per-device payload of ONE gossip permute — the number
+                    # that drops by the shard factor S (sharded mode keeps
+                    # each FSDP shard's own row block on the wire)
+                    "wire_bytes_per_device_per_term": rows_wire * 128 * 4,
+                    # summed over the S shards of every agent
+                    "wire_bytes_per_step":
+                        n_perm * A * S * rows_wire * 128 * 4,
+                    "divergence_gate": "pass",
+                })
+    return results
+
+
+def write_shard_bench_json(results: List[dict]) -> str:
+    """Persist the sharded-vs-gathered sweep to BENCH_shard.json."""
+    payload = {
+        "bench": "gossip_sharded_vs_gathered",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "note": (
+            "Shard-resident gossip (DESIGN §7) on a 2-pod x 4-shard host "
+            "mesh: 'sharded' permutes each FSDP shard's own rows/S block "
+            "(P('pod','data')); 'gathered' is the pre-composition layout "
+            "with rows replicated over the shard axis, so every shard "
+            "ships the full per-agent payload — S x the wire bytes and, "
+            "with real FSDP state, an all-gather before every permute.  "
+            "CPU wall-clock bounds structure only; the "
+            "wire_bytes_per_device_per_term column is the modeled TPU "
+            "claim, and the divergence gate (sharded == dense oracle) is "
+            "the backend-independent contract."),
+        "results": results,
+    }
+    with open(BENCH_SHARD_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return BENCH_SHARD_JSON
+
+
+def _shard_csv_rows(rows: List[dict]) -> List[str]:
+    from .common import csv_row
+    return [csv_row(
+        f"gossip_shard/rows={row['rows']}/{row['mode']}"
+        f"{'_fused' if row['fused'] else ''}",
+        row["us_per_step"],
+        f"A={row['agents']};S={row['shards']};"
+        f"wire_dev_term={row['wire_bytes_per_device_per_term']};"
+        f"wire_step={row['wire_bytes_per_step']}") for row in rows]
+
+
+def _shard_subprocess(iters: int = 20) -> List[dict]:
+    """Run :func:`sharded_sweep` under an 8-device host platform."""
+    return _bench_subprocess(["--sharded-inner", "--iters", str(iters)],
+                             _SHARD_MARKER, 8, "sharded sweep")
 
 
 # ---------------------------------------------------------------------------
@@ -681,23 +819,11 @@ def _e2e_csv_rows(rows: List[dict]) -> List[str]:
 def _schedule_subprocess(which: str, steps: int,
                          block_rows: int = 0) -> List[dict]:
     """Run :func:`schedule_sweep` under a 32-device host platform."""
-    env = {**os.environ,
-           "XLA_FLAGS": "--xla_force_host_platform_device_count=32",
-           "PYTHONPATH": os.path.join(REPO, "src")
-           + (os.pathsep + os.environ["PYTHONPATH"]
-              if os.environ.get("PYTHONPATH") else "")}
-    if block_rows:
-        env["REPRO_BLOCK_ROWS"] = str(block_rows)
-    r = subprocess.run([sys.executable, "-m", "benchmarks.gossip_micro",
-                        "--schedule-inner", which, "--steps", str(steps),
-                        "--block-rows", str(block_rows)],
-                       cwd=REPO, env=env, capture_output=True, text=True,
-                       timeout=900)
-    for line in r.stdout.splitlines():
-        if line.startswith(_SCHED_MARKER):
-            return json.loads(line[len(_SCHED_MARKER):])
-    raise RuntimeError(f"schedule sweep failed:\n{r.stdout[-2000:]}"
-                       f"\n{r.stderr[-2000:]}")
+    extra = {"REPRO_BLOCK_ROWS": str(block_rows)} if block_rows else None
+    return _bench_subprocess(
+        ["--schedule-inner", which, "--steps", str(steps),
+         "--block-rows", str(block_rows)],
+        _SCHED_MARKER, 32, "schedule sweep", extra_env=extra)
 
 
 def _sched_csv_rows(rows: List[dict]) -> List[str]:
@@ -726,19 +852,7 @@ def write_bench_json(results: List[dict]) -> str:
 
 def _sweep_subprocess() -> List[str]:
     """Run :func:`sweep` under a 32-device host platform (one per agent)."""
-    env = {**os.environ,
-           "XLA_FLAGS": "--xla_force_host_platform_device_count=32",
-           "PYTHONPATH": os.path.join(REPO, "src")
-           + (os.pathsep + os.environ["PYTHONPATH"]
-              if os.environ.get("PYTHONPATH") else "")}
-    r = subprocess.run([sys.executable, "-m", "benchmarks.gossip_micro",
-                        "--sweep"], cwd=REPO, env=env, capture_output=True,
-                       text=True, timeout=900)
-    for line in r.stdout.splitlines():
-        if line.startswith(_SWEEP_MARKER):
-            return json.loads(line[len(_SWEEP_MARKER):])
-    raise RuntimeError(f"engine sweep failed:\n{r.stdout[-2000:]}"
-                       f"\n{r.stderr[-2000:]}")
+    return _bench_subprocess(["--sweep"], _SWEEP_MARKER, 32, "engine sweep")
 
 
 def run(verbose: bool = True) -> Dict:
@@ -833,10 +947,23 @@ def _cli() -> None:
                     help="sweep the kernel BLOCK_ROWS tile over "
                          "{128,256,512,1024} per bus size and print the "
                          "argmin (interpret-mode wall clock off-TPU)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="sharded vs gathered gossip sweep (DESIGN §7; in "
+                         "an 8-device 2-pod x 4-shard subprocess) + the "
+                         "sharded==dense equivalence gate; writes "
+                         "BENCH_shard.json")
+    ap.add_argument("--sharded-inner", action="store_true",
+                    help="(inner) sharded sweep; needs 8 devices")
     args = ap.parse_args()
 
     if args.sweep:
         print(_SWEEP_MARKER + json.dumps(sweep()))
+    elif args.sharded_inner:
+        print(_SHARD_MARKER + json.dumps(sharded_sweep(iters=args.iters)))
+    elif args.sharded:
+        rows = _shard_subprocess(iters=args.iters)
+        print("\n".join(_shard_csv_rows(rows)))
+        print(f"wrote {write_shard_bench_json(rows)}")
     elif args.autotune_block_rows:
         autotune_block_rows()
     elif args.e2e_inner:

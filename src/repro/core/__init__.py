@@ -4,8 +4,8 @@ from .topology import (  # noqa: F401
     hierarchical, disconnected, spectral_stats, matrix_lam,
 )
 from .mixing import (  # noqa: F401
-    mix_dense, mix_shifts, mix_ppermute, make_mixer, make_schedule_mixer,
-    make_overlap_mixer, accumulate_f32,
+    mix_dense, mix_shifts, mix_ppermute, mix_dense_sharded, make_mixer,
+    make_schedule_mixer, make_overlap_mixer, accumulate_f32,
 )
 from .schedule import (  # noqa: F401
     GossipSchedule, StaticSchedule, RoundRobinExp, AlternatingHierarchical,

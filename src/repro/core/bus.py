@@ -20,10 +20,17 @@ Layout contract (DESIGN §5):
   every leaf's flattened elements start at an 8-row (8×128-element)
   boundary, so each leaf slot is independently VPU-tile-aligned;
 * the buffer's total row count is rounded up to a multiple of
-  ``block_rows`` (default: the REPRO_BLOCK_ROWS-tunable kernel tile) —
-  the single tail pad region; all pad elements are zero and stay zero
-  under the EDM update and any doubly-stochastic mix (both map 0 → 0),
-  so the pad never contaminates logical values;
+  ``block_rows · shards`` (default: the REPRO_BLOCK_ROWS-tunable kernel
+  tile × the FSDP shard count, DESIGN §7) — the single tail pad region;
+  all pad elements are zero and stay zero under the EDM update and any
+  doubly-stochastic mix (both map 0 → 0), so the pad never contaminates
+  logical values;
+* shard-resident mode (``shards=S > 1``, DESIGN §7): the row axis is
+  meant to be sharded S ways over the pod-internal mesh axis.  The
+  rounding above guarantees ``rows % S == 0`` **and** that each shard's
+  ``rows/S`` block is itself a whole number of kernel grid tiles, so
+  every shard can run the fused kernels and the gossip permutes on its
+  own row block without ever gathering;
 * dtype policy: the bus carries one storage dtype (default f32); leaves
   are cast on pack and restored to their recorded dtype on unpack.  Any
   sub-f32 leaf (bf16/f16) round-trips losslessly through an f32 bus; a
@@ -84,9 +91,17 @@ class BusLayout:
 
     treedef: Any
     slots: Tuple[LeafSlot, ...]
-    rows: int                  # total rows incl. tail pad; % block_rows == 0
+    rows: int                  # total rows incl. tail pad; % (block_rows·shards) == 0
     block_rows: int
     dtype: Any                 # bus storage dtype (f32 default)
+    shards: int = 1            # FSDP row-shard count (DESIGN §7)
+
+    @property
+    def shard_rows(self) -> int:
+        """Rows each FSDP shard owns (``rows / shards``) — a whole number
+        of ``block_rows`` grid tiles by layout construction."""
+        assert self.rows % self.shards == 0, (self.rows, self.shards)
+        return self.rows // self.shards
 
     @property
     def logical_elems(self) -> int:
@@ -117,14 +132,17 @@ _LAYOUT_CACHE: dict = {}
 
 
 def make_layout(tree: Any, *, block_rows: int | None = None,
-                dtype: Any = jnp.float32) -> BusLayout:
+                dtype: Any = jnp.float32, shards: int = 1) -> BusLayout:
     """Build (or fetch from cache) the bus layout for ``tree``.
 
     ``tree`` leaves must be floating arrays (or ShapeDtypeStructs) of shape
     ``(A, *leaf_shape)`` — the leading agent axis is stripped; two trees
     differing only in ``A`` share one layout.  ``block_rows`` defaults to
     the kernel's :data:`~repro.kernels.edm_update.BLOCK_ROWS` so the packed
-    buffer is directly griddable by ``edm_update_flat``.
+    buffer is directly griddable by ``edm_update_flat``.  ``shards`` rounds
+    the total rows up to ``block_rows · shards`` so the row axis splits
+    evenly into per-shard blocks that are themselves griddable
+    (shard-resident gossip, DESIGN §7).
     """
     from repro.kernels.edm_update import BLOCK_ROWS, LANE as _KERNEL_LANE
     assert _KERNEL_LANE == LANE, (
@@ -133,9 +151,10 @@ def make_layout(tree: Any, *, block_rows: int | None = None,
     if block_rows is None:
         block_rows = BLOCK_ROWS
     assert block_rows > 0 and block_rows % _SUBLANE == 0, block_rows
+    assert shards >= 1, shards
     flat, treedef = jax.tree_util.tree_flatten(tree)
     assert flat, "cannot build a bus layout for an empty tree"
-    key = (_leaf_signature(tree), block_rows, jnp.dtype(dtype).name)
+    key = (_leaf_signature(tree), block_rows, jnp.dtype(dtype).name, shards)
     hit = _LAYOUT_CACHE.get(key)
     if hit is not None:
         return hit
@@ -152,22 +171,24 @@ def make_layout(tree: Any, *, block_rows: int | None = None,
         rows = padded_rows(size)
         slots.append(LeafSlot(row, rows, shape, jnp.dtype(leaf.dtype), size))
         row += rows
-    total = -(-row // block_rows) * block_rows if row else block_rows
+    quantum = block_rows * shards
+    total = -(-row // quantum) * quantum if row else quantum
     layout = BusLayout(treedef, tuple(slots), total, block_rows,
-                       jnp.dtype(dtype))
+                       jnp.dtype(dtype), shards)
     _LAYOUT_CACHE[key] = layout
     return layout
 
 
 def layout_of(model, n_agents: int, *, block_rows: int | None = None,
-              dtype: Any = jnp.float32) -> BusLayout:
+              dtype: Any = jnp.float32, shards: int = 1) -> BusLayout:
     """Layout for a :class:`~repro.models.api.Model`'s parameter tree with
     a leading agent axis — shape-only (``jax.eval_shape``), no allocation."""
     shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     lifted = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((n_agents,) + tuple(s.shape), s.dtype),
         shapes)
-    return make_layout(lifted, block_rows=block_rows, dtype=dtype)
+    return make_layout(lifted, block_rows=block_rows, dtype=dtype,
+                       shards=shards)
 
 
 def pack_tree(layout: BusLayout, tree: Any) -> jax.Array:

@@ -27,6 +27,13 @@ this: an ``(A, rows, 128)`` superbuffer is a one-leaf tree, so the ppermute
 engine ships ONE payload per gossip term for the whole parameter set
 (L·T permutes → T) and the fused combine runs once — no engine changes,
 the leaf-count factor just disappears from the wire schedule.
+
+Shard-resident gossip (DESIGN §7): with ``shard_axes`` set, leaf dim 1 (the
+bus row axis) is additionally sharded over a pod-internal mesh axis (FSDP).
+Gossip is agent-axis-pointwise in the row dim, so every permute stays
+**shard-local**: each FSDP shard permutes only its own row block along the
+agent axes and combines locally — per-device wire bytes drop by the shard
+factor and no all-gather ever feeds a gossip permute.
 """
 from __future__ import annotations
 
@@ -42,8 +49,9 @@ from repro.compat import shard_map
 
 from .topology import Topology
 
-__all__ = ["mix_dense", "mix_shifts", "mix_ppermute", "make_mixer",
-           "make_schedule_mixer", "make_overlap_mixer", "accumulate_f32"]
+__all__ = ["mix_dense", "mix_shifts", "mix_ppermute", "mix_dense_sharded",
+           "make_mixer", "make_schedule_mixer", "make_overlap_mixer",
+           "accumulate_f32"]
 
 
 def accumulate_f32(fn):
@@ -212,7 +220,8 @@ def _make_permute_term(topo: Topology, names, sizes, split: bool, B: int):
 def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
                  use_fused_kernel: bool = False,
                  interpret: bool | None = None,
-                 transport: str = "auto") -> Any:
+                 transport: str = "auto",
+                 shard_axes: str | None = None) -> Any:
     """Production gossip engine: ``shard_map`` + ``jax.lax.ppermute``.
 
     The agent axis is *consumed* by the mesh (a block of A/M agents per mesh
@@ -244,6 +253,13 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
     guide's RDMA pattern but is not yet validated on hardware — auto must
     not silently swap it into a production run), else ppermute.  Off-TPU
     (this container) every selection falls back to ppermute.
+
+    ``shard_axes`` names the mesh axis FSDP-sharding leaf dim 1 (the bus
+    row axis, DESIGN §7).  The permutes are unchanged — they run along the
+    agent axes only — but each mesh slice now holds ``rows/S`` rows, so
+    every permute and the combine operate on the shard's own row block
+    (shard-local gossip; the ring_dma transport does not compose with row
+    sharding and is excluded).
     """
     import os
 
@@ -253,12 +269,20 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
     axis_flat = names if len(names) > 1 else names[0]
     A = topo.n_agents
     permute_term = _make_permute_term(topo, names, sizes, split, B)
+    if shard_axes is not None:
+        assert shard_axes not in names, (shard_axes, names)
+        assert B == 1, "shard-resident gossip needs one agent per mesh slice"
+        for l in jax.tree.leaves(tree):
+            assert getattr(l, "ndim", 0) >= 2, \
+                "shard_axes shards leaf dim 1 — leaves need >= 2 dims"
 
     assert transport in ("auto", "ppermute", "ring_dma"), transport
     ring_plan = None
     if transport != "ppermute":
         from repro.kernels import ring_dma
-        eligible = (ring_dma.ring_dma_supported(topo, n_axes=len(names), B=B)
+        eligible = (shard_axes is None
+                    and ring_dma.ring_dma_supported(topo, n_axes=len(names),
+                                                    B=B)
                     and all(getattr(l, "ndim", 0) == 3 and l.shape[-1] == 128
                             for l in jax.tree.leaves(tree)))
         if transport == "ring_dma":
@@ -295,19 +319,55 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
                      for x in leaves)
 
     flat, treedef = jax.tree_util.tree_flatten(tree)
-    specs = tuple(P(axis_flat) for _ in flat)
+    spec = P(axis_flat) if shard_axes is None else P(axis_flat, shard_axes)
+    specs = tuple(spec for _ in flat)
     out = shard_map(body, mesh, specs, specs)(*flat)
     return jax.tree_util.tree_unflatten(treedef, list(out))
 
 
+def mix_dense_sharded(topo: Topology, mesh, agent_axes, shard_axes,
+                      tree: Any) -> Any:
+    """Shard-resident dense oracle (DESIGN §7): ``W x`` under the same
+    ``P(agent_axes, shard_axes)`` layout the sharded ppermute engine uses.
+
+    Each shard all-gathers its OWN row block along the agent axis only
+    (never the shard axis), applies the dense W to the gathered
+    ``(A, rows/S, ...)`` stack, and keeps its own agent's result — so the
+    oracle stays row-sharded end to end and the sharded equivalence test
+    ``mix_ppermute == mix_dense_sharded == mix_dense`` runs under a real
+    pods × shards host mesh without materializing a replica.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    names, _, _, B = _agent_axis_info(topo, mesh, agent_axes)
+    assert B == 1, "shard-resident dense oracle needs one agent per slice"
+    axis_flat = names if len(names) > 1 else names[0]
+    A = topo.n_agents
+    W = jnp.asarray(topo.dense_matrix(), dtype=jnp.float32)
+
+    def body(x):
+        # x: (1, rows/S, ...) — this agent's row block on this shard
+        gathered = jax.lax.all_gather(x[0], axis_flat)   # (A, rows/S, ...)
+        flat = gathered.reshape(A, -1).astype(jnp.float32)
+        mixed = (W @ flat).reshape(gathered.shape).astype(x.dtype)
+        idx = jax.lax.axis_index(axis_flat)
+        return jax.lax.dynamic_slice_in_dim(mixed, idx, 1, axis=0)
+
+    spec = P(axis_flat, shard_axes)
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    out = [shard_map(body, mesh, (spec,), spec)(l) for l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def make_mixer(topo: Topology, engine: str = "shifts", mesh=None,
                agent_axes=None, use_fused_kernel: bool = False,
-               transport: str = "auto"):
+               transport: str = "auto", shard_axes: str | None = None):
     """Return ``mix(tree) -> tree``.  engine ∈ {"dense", "shifts", "ppermute"}.
 
     ``mesh``/``agent_axes`` are required for (and only used by) the ppermute
     engine; ``use_fused_kernel`` routes its combine through the fused Pallas
-    ``gossip_axpy`` kernel and ``transport`` selects its wire mechanism
+    ``gossip_axpy`` kernel, ``transport`` selects its wire mechanism and
+    ``shard_axes`` enables shard-resident gossip over FSDP row shards
     (see :func:`mix_ppermute`).
     """
     if engine == "dense":
@@ -319,12 +379,13 @@ def make_mixer(topo: Topology, engine: str = "shifts", mesh=None,
             "ppermute engine needs mesh= and agent_axes="
         return functools.partial(mix_ppermute, topo, mesh, agent_axes,
                                  use_fused_kernel=use_fused_kernel,
-                                 transport=transport)
+                                 transport=transport, shard_axes=shard_axes)
     raise ValueError(f"unknown mixing engine: {engine}")
 
 
 def make_schedule_mixer(sched, engine: str = "shifts", mesh=None,
-                        agent_axes=None, use_fused_kernel: bool = False):
+                        agent_axes=None, use_fused_kernel: bool = False,
+                        shard_axes: str | None = None):
     """Step-indexed mixer over a :class:`~repro.core.schedule.GossipSchedule`:
     returns ``mix(tree, step=0) -> tree`` applying the schedule's round
     ``step % period`` through the chosen engine.
@@ -337,7 +398,8 @@ def make_schedule_mixer(sched, engine: str = "shifts", mesh=None,
     ``make_mixer`` path.
     """
     mixers = [make_mixer(r, engine, mesh=mesh, agent_axes=agent_axes,
-                         use_fused_kernel=use_fused_kernel)
+                         use_fused_kernel=use_fused_kernel,
+                         shard_axes=shard_axes)
               for r in sched.rounds]
     if sched.period == 1:
         return lambda tree, step=0: mixers[0](tree)
@@ -352,7 +414,8 @@ def make_schedule_mixer(sched, engine: str = "shifts", mesh=None,
 
 def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
                        agent_axes=None, use_fused_kernel: bool = False,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       shard_axes: str | None = None):
     """Phase-split schedule mixer for the overlapped gossip pipeline
     (DESIGN §6): returns ``(issue, complete)`` such that
     ``complete(issue(x, step), step)`` equals the synchronous
@@ -380,7 +443,8 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
     if engine != "ppermute":
         mix = make_schedule_mixer(sched, engine, mesh=mesh,
                                   agent_axes=agent_axes,
-                                  use_fused_kernel=use_fused_kernel)
+                                  use_fused_kernel=use_fused_kernel,
+                                  shard_axes=shard_axes)
         return (lambda x, step=0: x), mix
 
     from jax.sharding import PartitionSpec as P
@@ -399,6 +463,9 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
     def make_issue(topo):
         names, sizes, split, B = _agent_axis_info(topo, mesh, agent_axes)
         axis_flat = names if len(names) > 1 else names[0]
+        if shard_axes is not None:
+            assert B == 1, \
+                "shard-resident gossip needs one agent per mesh slice"
         permute_term = _make_permute_term(topo, names, sizes, split, B)
 
         def body(x):
@@ -406,7 +473,11 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
             pays += [x] * (K - len(pays))   # weight-0 pad to the max arity
             return jnp.stack(pays)
 
-        return shard_map(body, mesh, (P(axis_flat),), P(None, axis_flat))
+        in_spec = (P(axis_flat) if shard_axes is None
+                   else P(axis_flat, shard_axes))
+        out_spec = (P(None, axis_flat) if shard_axes is None
+                    else P(None, axis_flat, shard_axes))
+        return shard_map(body, mesh, (in_spec,), out_spec)
 
     issues = [make_issue(r) for r in sched.rounds]
 
@@ -428,7 +499,10 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
             acc = acc + w[k] * ops[k]
         return acc
 
-    combine = shard_map(combine_body, mesh, (P(), P(None, axis0)), P(axis0))
+    pay_spec = (P(None, axis0) if shard_axes is None
+                else P(None, axis0, shard_axes))
+    out0 = P(axis0) if shard_axes is None else P(axis0, shard_axes)
+    combine = shard_map(combine_body, mesh, (P(), pay_spec), out0)
 
     def complete(payloads, step=0):
         return combine(w_table[step % sched.period], payloads)

@@ -111,7 +111,8 @@ def make_edm(alpha: float, beta: float, mix: Mixer,
 
 def make_edm_bus(alpha: float, beta: float, mix: Mixer, *,
                  block_rows: int | None = None,
-                 use_fused_kernel: bool = False) -> DecOptimizer:
+                 use_fused_kernel: bool = False,
+                 update=None) -> DecOptimizer:
     """Bus-resident EDM (DESIGN §5): same Algorithm 1 recursion as
     :func:`make_edm`, but every state tensor is ONE packed ``(A, rows, 128)``
     superbuffer (:mod:`repro.core.bus`) instead of a pytree of leaves.
@@ -128,6 +129,13 @@ def make_edm_bus(alpha: float, beta: float, mix: Mixer, *,
     Zero-preservation keeps the layout's pad region inert: m, ψ and φ are 0
     wherever x, g and ψ start 0, and every doubly-stochastic W maps 0 → 0,
     so pad bytes never leak into logical values.
+
+    ``update`` overrides the fused-update call with a caller-built
+    ``update(x, g, m, psi) -> (m', ψ', φ)`` — the shard-resident hook
+    (DESIGN §7): the trainer wraps ``edm_update_bus`` in a ``shard_map``
+    over the bus sharding so each FSDP shard launches the kernel on its
+    own row block instead of XLA gathering the bus around an unpartitioned
+    pallas_call.
     """
 
     def init(x_bus) -> State:
@@ -136,7 +144,10 @@ def make_edm_bus(alpha: float, beta: float, mix: Mixer, *,
         return {"m": jnp.zeros_like(x_bus), "psi": jnp.copy(x_bus)}
 
     def step(x_bus, g_bus, state: State):
-        if use_fused_kernel:
+        if update is not None:
+            m_new, psi_new, phi = update(x_bus, g_bus, state["m"],
+                                         state["psi"])
+        elif use_fused_kernel:
             from repro.kernels import ops as kops
             m_new, psi_new, phi = kops.edm_update_bus(
                 x_bus, g_bus, state["m"], state["psi"],

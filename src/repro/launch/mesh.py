@@ -39,7 +39,7 @@ def make_sim_mesh():
 
 
 def make_gossip_mesh(n_agents: int, pods: int = 1,
-                     agents_per_device: int = 1):
+                     agents_per_device: int = 1, shards: int = 1):
     """Mesh whose device grid carries the agent grid — a block of
     ``agents_per_device`` agents per device, as the ppermute engine requires
     (DESIGN §3–4).
@@ -53,14 +53,31 @@ def make_gossip_mesh(n_agents: int, pods: int = 1,
     n=32 simulations run on 8-device hosts) always builds the single flat
     ``('data',)`` axis the blocked engine needs; hierarchical terms
     decompose inside the engine, not the mesh.
+
+    Shard-resident mode (``shards > 1``, DESIGN §7): each agent spans a
+    whole pod of ``shards`` FSDP devices — an ``(n_agents, shards)`` grid
+    with axes ``('pod', 'data')`` where **'pod' is the agent axis and
+    'data' the row-shard axis** (unlike the ``pods > 1`` grid above, where
+    both axes carry agents).  Use agent_axes='pod', shard_axes='data'.
     """
     from jax.sharding import Mesh
 
     B = agents_per_device
     assert B >= 1 and n_agents % B == 0, (n_agents, B)
     assert n_agents % max(pods, 1) == 0, (n_agents, pods)
-    n_dev = n_agents // B
+    assert shards >= 1, shards
     devices = jax.devices()
+    if shards > 1:
+        assert B == 1, "shard-resident gossip needs one agent per slice"
+        assert pods in (1, n_agents), \
+            "shards>1 makes every agent a pod — pods must equal n_agents"
+        n_dev = n_agents * shards
+        assert len(devices) >= n_dev, \
+            f"need {n_dev} devices for {n_agents} pod-agents × {shards} " \
+            f"shards, have {len(devices)}"
+        grid = np.array(devices[:n_dev]).reshape(n_agents, shards)
+        return Mesh(grid, ("pod", "data"))
+    n_dev = n_agents // B
     assert len(devices) >= n_dev, \
         f"need {n_dev} devices for {B}-agent-per-device gossip, " \
         f"have {len(devices)}"
@@ -72,8 +89,16 @@ def make_gossip_mesh(n_agents: int, pods: int = 1,
     return Mesh(np.array(devices[:n_dev]), ("data",))
 
 
-def gossip_agent_axes(mesh):
-    """The agent_axes tuple/name the gossip engines consume on ``mesh``."""
+def gossip_agent_axes(mesh, sharded: bool = False):
+    """The agent_axes tuple/name the gossip engines consume on ``mesh``.
+
+    ``sharded=True`` reads the mesh as a shard-resident pods × shards grid
+    (DESIGN §7): only 'pod' carries agents — 'data' is the FSDP row-shard
+    axis (pass it as ``shard_axes``)."""
+    if sharded:
+        assert "pod" in mesh.axis_names and "data" in mesh.axis_names, \
+            mesh.axis_names
+        return "pod"
     names = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
     assert names, mesh.axis_names
     return names if len(names) > 1 else names[0]

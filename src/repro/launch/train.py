@@ -30,13 +30,21 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-sized)")
     ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--agents", default="4",
+                    help="agent count (int, agents='data'), or 'pod' for "
+                         "shard-resident pod agents (DESIGN §7): one agent "
+                         "per pod of --shards FSDP devices, --pods agents "
+                         "total, gossip over row-sharded buses")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--per-agent-batch", type=int, default=1)
     ap.add_argument("--algorithm", default="edm")
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--pods", type=int, default=1,
-                    help="pod count for torus/hier topologies")
+                    help="pod count for torus/hier topologies; with "
+                         "--agents pod, the number of pod-agents")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="--agents pod: FSDP devices per pod-agent "
+                         "(0 = device_count // pods)")
     ap.add_argument("--gossip-engine", default="shifts",
                     choices=["dense", "shifts", "ppermute"],
                     help="mixing engine; ppermute needs one device per agent "
@@ -76,9 +84,20 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
-    run = RunConfig(global_batch=args.agents * args.per_agent_batch,
+    pod_agents = args.agents == "pod"
+    if pod_agents:
+        assert args.gossip_engine == "ppermute", \
+            "--agents pod rides the shard-resident ppermute path " \
+            "(set --gossip-engine ppermute)"
+        n_agents = args.pods
+        shards = args.shards or max(jax.device_count() // args.pods, 1)
+    else:
+        n_agents = int(args.agents)
+        shards = 1
+    run = RunConfig(global_batch=n_agents * args.per_agent_batch,
                     seq_len=args.seq, algorithm=args.algorithm,
                     alpha=args.alpha, beta=args.beta, topology=args.topology,
+                    agents="pod" if pod_agents else "data",
                     gossip_engine=args.gossip_engine,
                     gossip_schedule=args.gossip_schedule,
                     gossip_period=args.gossip_period,
@@ -86,19 +105,26 @@ def main():
                     agents_per_device=args.agents_per_device,
                     packed_bus=args.packed_bus, overlap=args.overlap,
                     remat=False)
-    sched = make_gossip_schedule(run, args.agents, pods=args.pods)
-    mesh = agent_axes = None
+    sched = make_gossip_schedule(run, n_agents,
+                                 pods=1 if pod_agents else args.pods)
+    mesh = agent_axes = shard_axes = None
     if args.gossip_engine == "ppermute":
         from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
-        mesh = make_gossip_mesh(args.agents, pods=args.pods,
-                                agents_per_device=args.agents_per_device)
-        agent_axes = gossip_agent_axes(mesh)
+        if pod_agents:
+            mesh = make_gossip_mesh(n_agents, pods=n_agents, shards=shards)
+            agent_axes = gossip_agent_axes(mesh, sharded=True)
+            shard_axes = "data"
+        else:
+            mesh = make_gossip_mesh(n_agents, pods=args.pods,
+                                    agents_per_device=args.agents_per_device)
+            agent_axes = gossip_agent_axes(mesh)
     stats = sched.product_spectral_stats()
     # --topology only feeds the static schedule; don't print it otherwise
     topo_str = (f"topo={args.topology} " if args.gossip_schedule == "static"
                 else "")
+    shard_str = f"x{shards}shards" if pod_agents else ""
     print(f"arch={cfg.name} ({cfg.n_params()/1e6:.1f}M params) "
-          f"agents={args.agents} {topo_str}"
+          f"agents={n_agents}{shard_str} {topo_str}"
           f"schedule={sched.name} period={sched.period} "
           f"λ_prod={stats['lambda']:.4f} "
           f"alg={args.algorithm} engine={args.gossip_engine}"
@@ -107,7 +133,7 @@ def main():
           f"{' +overlap' if use_overlap(run) else ''}")
 
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                       n_agents=args.agents, phi=args.phi)
+                       n_agents=n_agents, phi=args.phi)
 
     def sample(key):
         b = data.sample(key, args.per_agent_batch)
@@ -115,17 +141,29 @@ def main():
             import jax.numpy as jnp
             b["frontend"] = jax.random.normal(
                 jax.random.fold_in(key, 1),
-                (args.agents, args.per_agent_batch, cfg.n_frontend_tokens,
+                (n_agents, args.per_agent_batch, cfg.n_frontend_tokens,
                  cfg.d_model), dtype=jnp.dtype(cfg.dtype))
         return b
 
-    state = init_state(model, run, args.agents, jax.random.PRNGKey(0))
+    state = init_state(model, run, n_agents, jax.random.PRNGKey(0),
+                       shards=shards)
+    if pod_agents:
+        # place the bus state shard-resident up front: agent axis on 'pod',
+        # rows FSDP-sharded over 'data' (state_specs, DESIGN §7)
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.train import state_specs
+        shardings = jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp),
+            state_specs(model, run, multi_pod=True),
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        state = jax.tree.map(jax.device_put, state, shardings)
     # bus-resident state: donate so XLA aliases the superbuffers in place
     # (params/m/psi update without a second HBM copy, DESIGN §5)
     donate = (0,) if use_packed_bus(run) else ()
     step = jax.jit(build_train_step(model, run, sched,
                                     use_fused_kernel=args.fused_kernel,
-                                    mesh=mesh, agent_axes=agent_axes),
+                                    mesh=mesh, agent_axes=agent_axes,
+                                    shard_axes=shard_axes),
                    donate_argnums=donate)
     key = jax.random.PRNGKey(1)
     t0 = time.time()
@@ -137,10 +175,11 @@ def main():
                   f"consensus={float(m['consensus']):.2e} "
                   f"({time.time()-t0:.1f}s)", flush=True)
     if args.ckpt:
-        layout = (bus_layout_for(model, args.agents)
+        layout = (bus_layout_for(model, n_agents, shards=shards)
                   if use_packed_bus(run) else None)
         # full resumable state (params + opt + step + pipeline), stored as
-        # logical trees — layout- and overlap-mode-independent on disk
+        # logical trees — layout-, sharding- and overlap-mode-independent
+        # on disk
         checkpoint.save_state(args.ckpt, state, layout=layout)
         print(f"checkpoint -> {args.ckpt}")
 

@@ -67,9 +67,17 @@ def save(path: str, tree: Any, layout: Optional[Any] = None) -> None:
     """Save ``tree`` as .npz.  ``layout`` marks ``tree``'s bus-shaped array
     leaves as packed-bus buffers (:class:`~repro.core.bus.BusLayout`): they
     are unpacked to the logical tree first, keeping the on-disk format
-    layout-independent."""
+    layout-independent.
+
+    FSDP-sharded buses (DESIGN §7) serialize like any other state: the
+    bus translation runs where the data lives and the logical tree is
+    pulled to host once — the on-disk format carries no trace of the
+    run's sharding or shard-padded layout, so a checkpoint saved sharded
+    loads into a gathered run (or a different shard count) and vice
+    versa."""
     if layout is not None:
         tree = _unbus(tree, layout)
+    tree = jax.device_get(tree)
     arrays, _ = _flatten(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     np.savez(path, **arrays)

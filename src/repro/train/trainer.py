@@ -87,17 +87,21 @@ def use_packed_bus(run: RunConfig) -> bool:
     """Resolve ``RunConfig.packed_bus`` (DESIGN §5): explicit True/False
     wins; the None default turns the bus on for the production
     ``algorithm="edm"`` + ``gossip_engine="ppermute"`` combination, where
-    per-leaf launches and permutes dominate the step."""
+    per-leaf launches and permutes dominate the step.
+
+    ``agents="pod"`` composes too (DESIGN §7): the bus has no weight dim,
+    so FSDP shards its *row* axis instead — each agent's ``(rows, 128)``
+    superbuffer is row-sharded over the pod-internal ``data`` axis and
+    gossip runs shard-locally."""
     if run.packed_bus is not None:
         if run.packed_bus:
             assert run.algorithm == "edm", \
                 f"packed_bus supports algorithm='edm', got {run.algorithm!r}"
-            assert run.agents == "data", \
-                "packed_bus requires agents='data' (the bus has no weight " \
-                "dim for FSDP to shard)"
+            assert run.agents in ("data", "pod"), \
+                f"packed_bus supports agents='data'|'pod', got {run.agents!r}"
         return run.packed_bus
     return (run.algorithm == "edm" and run.gossip_engine == "ppermute"
-            and run.agents == "data")
+            and run.agents in ("data", "pod"))
 
 
 def use_overlap(run: RunConfig) -> bool:
@@ -123,11 +127,13 @@ def use_overlap(run: RunConfig) -> bool:
     return True
 
 
-def bus_layout_for(model: Model, n_agents: int) -> parambus.BusLayout:
+def bus_layout_for(model: Model, n_agents: int,
+                   shards: int = 1) -> parambus.BusLayout:
     """Cached bus layout of ``model``'s parameter tree with a leading agent
     axis — the single layout object shared by ``init_state``, the train
-    step and checkpointing (shape-only, no allocation)."""
-    return parambus.layout_of(model, n_agents)
+    step and checkpointing (shape-only, no allocation).  ``shards`` is the
+    FSDP row-shard count of the shard-resident mode (DESIGN §7)."""
+    return parambus.layout_of(model, n_agents, shards=shards)
 
 
 def _cast_mixer(mix, dtype: Optional[str]):
@@ -142,7 +148,7 @@ def _cast_mixer(mix, dtype: Optional[str]):
 
 def build_train_step(model: Model, run: RunConfig, topo,
                      use_fused_kernel: bool = False, mesh=None,
-                     agent_axes=None) -> Callable:
+                     agent_axes=None, shard_axes=None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch leaves: (A, per_agent_batch, ...).
@@ -176,17 +182,58 @@ def build_train_step(model: Model, run: RunConfig, topo,
     variant of EDM), and the combine + EDM update run after — so the wire
     sits in the backward pass's shadow instead of on the critical path.
     ``overlap="off"`` is bit-identical to the synchronous bus step.
+
+    With ``shard_axes`` set (``agents="pod"`` + FSDP, DESIGN §7) the bus's
+    row axis is sharded over that mesh axis: the gossip permutes, the
+    combine and the fused EDM update all run on each shard's own row block
+    (the fused kernel is shard_map-wrapped so XLA never gathers the bus
+    around an unpartitioned pallas_call), and every bus-shaped
+    intermediate is pinned to the ``P(agent_axes, shard_axes)`` sharding.
     """
     sched = topo if isinstance(topo, GossipSchedule) else StaticSchedule(topo)
     overlap = use_overlap(run)
     kw = dict(use_fused_kernel=use_fused_kernel) if run.algorithm == "edm" else {}
     packed = use_packed_bus(run)
-    layout = bus_layout_for(model, sched.n_agents) if packed else None
+    shards = 1
+    bus_spec = None
+    if shard_axes is not None:
+        assert packed, "shard_axes composes with the packed bus only"
+        assert mesh is not None and agent_axes is not None, \
+            "shard-resident gossip needs mesh= and agent_axes="
+        shards = int(mesh.shape[shard_axes])
+        agent_entry = (tuple(agent_axes)
+                       if isinstance(agent_axes, (tuple, list)) else agent_axes)
+        bus_spec = P(agent_entry, shard_axes)
+    layout = (bus_layout_for(model, sched.n_agents, shards=shards)
+              if packed else None)
+
+    def pin_bus(b):
+        """Keep bus-shaped intermediates row-sharded (no-op off pod mode)."""
+        if bus_spec is None:
+            return b
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            b, NamedSharding(mesh, bus_spec))
+
+    fused_update = None
+    if packed and shard_axes is not None and use_fused_kernel:
+        # shard-local fused EDM update: one pallas_call per shard over its
+        # own (A_local, rows/S, 128) block — griddable by layout contract.
+        from repro.compat import shard_map as _shard_map
+        from repro.kernels import ops as kops
+
+        def fused_update(x, g, m, psi):
+            body = functools.partial(kops.edm_update_bus, alpha=run.alpha,
+                                     beta=run.beta,
+                                     block_rows=layout.block_rows)
+            return _shard_map(body, mesh, (bus_spec,) * 4,
+                              (bus_spec,) * 3)(x, g, m, psi)
+
     base_mix = None
     if not overlap:
         base_mix = make_schedule_mixer(
             sched, engine=run.gossip_engine, mesh=mesh, agent_axes=agent_axes,
-            use_fused_kernel=use_fused_kernel)
+            use_fused_kernel=use_fused_kernel, shard_axes=shard_axes)
 
     def opt_at(step, mix_override=None):
         """Algorithm with the mixer bound to ``step``'s gossip round (the
@@ -196,7 +243,8 @@ def build_train_step(model: Model, run: RunConfig, topo,
         if packed:
             return make_edm_bus(run.alpha, run.beta, mix,
                                 block_rows=layout.block_rows,
-                                use_fused_kernel=use_fused_kernel)
+                                use_fused_kernel=use_fused_kernel,
+                                update=fused_update)
         return make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta,
                               mix=mix, **kw)
 
@@ -223,14 +271,16 @@ def build_train_step(model: Model, run: RunConfig, topo,
     if overlap:
         issue, complete = make_overlap_mixer(
             sched, engine=run.gossip_engine, mesh=mesh,
-            agent_axes=agent_axes, use_fused_kernel=use_fused_kernel)
+            agent_axes=agent_axes, use_fused_kernel=use_fused_kernel,
+            shard_axes=shard_axes)
         # the delayed pipeline mixes FIRST (the in-flight payload), then
         # runs the local EDM recursion on the mixed iterate — so the
         # optimizer's own mix is the identity and the wire lives in the
         # issue/complete phases around the backward pass.
         local_opt = make_edm_bus(run.alpha, run.beta, mix=lambda t: t,
                                  block_rows=layout.block_rows,
-                                 use_fused_kernel=use_fused_kernel)
+                                 use_fused_kernel=use_fused_kernel,
+                                 update=fused_update)
 
         def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
             pipe = state["pipeline"]
@@ -244,7 +294,7 @@ def build_train_step(model: Model, run: RunConfig, topo,
             params_tree = parambus.unpack_tree(layout, phi)
             losses, grads = grad_fn(params_tree, batch)
             grads = scaled_grads(grads, state["step"])
-            g_bus = parambus.pack_tree(layout, grads)
+            g_bus = pin_bus(parambus.pack_tree(layout, grads))
             # COMPLETE: weighted combine of the landed payloads, then the
             # bus-resident EDM update on the mixed iterate x(t) = W(t) φ(t).
             x_mixed = complete(payloads, g_step)
@@ -266,7 +316,7 @@ def build_train_step(model: Model, run: RunConfig, topo,
         losses, grads = grad_fn(params_tree, batch)
         grads = scaled_grads(grads, state["step"])
         g_step = gossip_round_step(state["step"], run.gossip_every)
-        g_in = parambus.pack_tree(layout, grads) if packed else grads
+        g_in = pin_bus(parambus.pack_tree(layout, grads)) if packed else grads
         opt = opt_at(g_step)
         if run.gossip_every > 1:
             # local-EDM: amortize gossip over k steps.  lax.cond — not a
@@ -304,7 +354,8 @@ def build_train_step(model: Model, run: RunConfig, topo,
     return train_step
 
 
-def init_state(model: Model, run: RunConfig, n_agents: int, key) -> TrainState:
+def init_state(model: Model, run: RunConfig, n_agents: int, key,
+               shards: int = 1) -> TrainState:
     """All agents start from the same x(0) (paper's initialization).
 
     With the packed bus active the state is packed ONCE here (DESIGN §5):
@@ -314,13 +365,14 @@ def init_state(model: Model, run: RunConfig, n_agents: int, key) -> TrainState:
     carries ``pipeline`` — the double-buffered payload ``slot[2]`` with its
     parity bit, seeded with φ(0) = x(0) in the live slot (step 0 then
     reproduces the synchronous step exactly: W x(0) = x(0) at a replicated
-    init).
+    init).  ``shards`` must match the train step's FSDP shard count in
+    shard-resident mode (DESIGN §7) so both sides build the same layout.
     """
     params1 = model.init(key)
     params = jax.tree.map(
         lambda l: jnp.broadcast_to(l[None], (n_agents,) + l.shape), params1)
     if use_packed_bus(run):
-        layout = bus_layout_for(model, n_agents)
+        layout = bus_layout_for(model, n_agents, shards=shards)
         x_bus = parambus.pack_tree(layout, params)
         opt = make_edm_bus(run.alpha, run.beta, mix=lambda t: t,
                            block_rows=layout.block_rows)
@@ -360,16 +412,22 @@ def prepend_agent_axis(spec: P, agent_axis, fsdp_axis: Optional[str] = None) -> 
 def state_specs(model: Model, run: RunConfig, multi_pod: bool) -> Dict[str, Any]:
     """PartitionSpecs for the TrainState under the chosen agent granularity."""
     if use_packed_bus(run):
-        # one (A, rows, 128) buffer per state slot, agent axis sharded —
-        # rows/lane replicated (the bus has no weight dim to FSDP-shard).
-        agent_axis = ("pod", "data") if multi_pod else "data"
-        spec = P(agent_axis)
+        if run.agents == "pod":
+            # shard-resident bus (DESIGN §7): agent axis on 'pod', the
+            # bus ROW axis FSDP-sharded over the pod-internal 'data' axis.
+            agent_axis = "pod" if multi_pod else None
+            spec = P(agent_axis, "data")
+        else:
+            # one (A, rows, 128) buffer per state slot, agent axis sharded
+            # — rows/lane replicated (agents="data" has no FSDP axis free).
+            agent_axis = ("pod", "data") if multi_pod else "data"
+            spec = P(agent_axis)
         specs = {"params": spec, "opt": {"m": spec, "psi": spec},
                  "step": P()}
         if use_overlap(run):
-            # slot: (2, A, rows, 128) — the 2-slot dim replicated, agent
-            # axis sharded on dim 1; parity is a replicated scalar.
-            specs["pipeline"] = {"slot": P(None, agent_axis), "parity": P()}
+            # slot: (2, A, rows, 128) — the 2-slot dim replicated, then the
+            # bus spec shifted right by one; parity is a replicated scalar.
+            specs["pipeline"] = {"slot": P(None, *spec), "parity": P()}
         return specs
 
     base = model.param_specs()

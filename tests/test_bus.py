@@ -147,6 +147,7 @@ if HAVE_HYP:
         min_size=1, max_size=6)
     leaf_dtypes = st.sampled_from([jnp.float32, jnp.bfloat16, jnp.float16])
 
+    @pytest.mark.slow
     @settings(max_examples=25, deadline=None)
     @given(shapes=leaf_shapes, dtype=leaf_dtypes,
            A=st.integers(1, 5), seed=st.integers(0, 2**16))

@@ -16,6 +16,11 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels import ops, ref
 from repro.kernels.edm_update import edm_update_flat, gossip_axpy_flat
 
+# hypothesis sweeps over interpret-mode Pallas are the slow tail of the
+# suite — CI's tier-1 job deselects them (-m "not slow"); a dedicated job
+# runs them, and the default local `pytest -q` still includes them.
+pytestmark = pytest.mark.slow
+
 jax.config.update("jax_enable_x64", False)
 
 

@@ -11,6 +11,10 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+# the hypothesis sweeps are the slow tail of the suite — tier-1 CI
+# deselects them (-m "not slow"); the slow-tests job runs them.
+pytestmark = pytest.mark.slow
+
 from repro.configs.base import ModelConfig
 from repro.core import exp_graph, hierarchical, make_mixer, ring, torus2d
 from repro.core.mixing import mix_dense, mix_shifts
