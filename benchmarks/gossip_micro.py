@@ -69,10 +69,12 @@ BENCH_JSON = os.path.join(REPO, "BENCH_gossip.json")
 BENCH_EDM_JSON = os.path.join(REPO, "BENCH_edm_step.json")
 BENCH_OVERLAP_JSON = os.path.join(REPO, "BENCH_overlap.json")
 BENCH_SHARD_JSON = os.path.join(REPO, "BENCH_shard.json")
+BENCH_ELASTIC_JSON = os.path.join(REPO, "BENCH_elastic.json")
 _SWEEP_MARKER = "SWEEP_CSV_JSON:"
 _SCHED_MARKER = "SCHED_JSON:"
 _E2E_MARKER = "E2E_JSON:"
 _SHARD_MARKER = "SHARD_JSON:"
+_ELASTIC_MARKER = "ELASTIC_JSON:"
 
 
 def _sweep_cases():
@@ -735,6 +737,252 @@ def _overlap_csv_rows(rows: List[dict]) -> List[str]:
 
 
 # ---------------------------------------------------------------------------
+# elastic fault-tolerant gossip: churn sweep + divergence gates (DESIGN §8)
+# ---------------------------------------------------------------------------
+
+ELASTIC_DROP_RATES = (0.0, 0.1, 0.25)
+
+
+def elastic_sweep(iters: int = 20, d: int = 1 << 16,
+                  drops=ELASTIC_DROP_RATES) -> List[dict]:
+    """Churn fault-injection sweep (DESIGN §8): us/step and wire bytes/step
+    vs. drop rate for the liveness-masked schedules, {static ring,
+    round_robin} × {plain, fused} ppermute on 8 agents / 8 devices.
+
+    Per drop rate a deterministic :class:`DropPlan` (epoch length = the
+    base period, so masks are period-aligned) wraps the base schedule in an
+    :class:`ElasticSchedule`; every schedule built here re-checks
+    Assumption 1 per degraded epoch, and every distinct degraded round is
+    gated masked-ppermute == dense-oracle before it is timed — any
+    divergence raises (the CI contract for the elastic path).  Timing
+    follows :func:`schedule_sweep`: one jitted application per distinct
+    round, weighted over one full plan cycle.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import (DropPlan, ElasticSchedule, RoundRobinExp,
+                            StaticSchedule, make_schedule_mixer, ring,
+                            wire_bytes_per_step)
+    from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
+    from .common import timeit_us
+
+    A = 8
+    n_epochs = 3
+    mesh = make_gossip_mesh(A)
+    axes = gossip_agent_axes(mesh)
+    results = []
+    for sname, make_base in (("static_ring", lambda: StaticSchedule(ring(A))),
+                             ("round_robin", lambda: RoundRobinExp(A))):
+        for drop in drops:
+            base = make_base()
+            plan = DropPlan.random(A, drop, seed=7, n_epochs=n_epochs,
+                                   epoch_len=base.period)
+            sched = ElasticSchedule(base, plan)
+            sched.check_assumption1()
+            stats = sched.product_spectral_stats()
+            window = n_epochs * base.period   # one full plan cycle
+            mix_oracle = make_schedule_mixer(sched, "dense")
+            for cname, fused in (("ppermute", False),
+                                 ("ppermute_fused", True)):
+                mix = make_schedule_mixer(sched, "ppermute", mesh=mesh,
+                                          agent_axes=axes,
+                                          use_fused_kernel=fused)
+                x = jax.random.normal(jax.random.PRNGKey(0), (A, d))
+                xs = jax.device_put(x, NamedSharding(mesh, P(axes)))
+                us_round = {}
+                for r in range(sched.period):
+                    got = jax.jit(lambda t, r=r: mix(t, step=r))(xs)
+                    import numpy as np
+                    np.testing.assert_allclose(
+                        np.asarray(got), np.asarray(mix_oracle(x, step=r)),
+                        rtol=2e-5, atol=1e-5,
+                        err_msg=f"elastic gate: {sname} drop={drop} "
+                                f"{cname} round {r} != dense oracle")
+                    us_round[r] = timeit_us(
+                        jax.jit(lambda t, r=r: mix(t, step=r)), xs,
+                        iters=max(iters // sched.period, 2))
+                us = sum(us_round[int(sched.round_index(t))]
+                         for t in range(window)) / window
+                wire = sum(wire_bytes_per_step(sched, t, elems_per_agent=d,
+                                               engine="ppermute")
+                           for t in range(window)) / window
+                results.append({
+                    "schedule": sname, "config": cname,
+                    "drop_rate": drop, "agents": A, "d": d,
+                    "base_period": base.period, "epochs": n_epochs,
+                    "us_per_step": round(us, 1),
+                    "wire_bytes_per_step": int(wire),
+                    "permutes_per_step": stats["permutes_per_step"],
+                    "lambda_max": round(stats["lambda"], 4),
+                    "gap_min": round(stats["gap"], 4),
+                })
+    return results
+
+
+def _step_W_table(sched, steps: int):
+    """(steps, n, n) float32 per-step dense mixing matrices — the oracle
+    for schedules whose W varies with the step (ElasticSchedule)."""
+    import numpy as np
+    mats, idx = {}, []
+    for t in range(steps):
+        r = int(sched.round_index(t))
+        if r not in mats:
+            mats[r] = sched.round(t).dense_matrix()
+        idx.append(r)
+    return np.stack([mats[r] for r in idx]).astype(np.float32)
+
+
+def _edm_churn_trajectory(grad_fn, x0, W_steps, *, alpha: float, beta: float,
+                          seed: int, eval_fn):
+    """Synchronous EDM under a per-step W table (all agents keep computing
+    local updates — churn only degrades the mixing, which is exactly what
+    the liveness-masked trainer does)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    Wj = jnp.asarray(W_steps, jnp.float32)
+
+    def body(carry, inp):
+        key, W = inp
+        x, m, psi = carry
+        g = grad_fn(x, key)
+        m2 = beta * m + (1.0 - beta) * g
+        psi2 = x - alpha * m2
+        phi = psi2 + x - psi
+        x2 = W @ phi
+        return (x2, m2, psi2), eval_fn(x2)
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), Wj.shape[0])
+    z = jnp.zeros_like(x0)
+    _, e = jax.lax.scan(body, (x0, z, x0), (keys, Wj))
+    return np.asarray(e)
+
+
+def churn_divergence_gates(verbose: bool = True) -> dict:
+    """The §E.1 quadratic and §E.2 logistic gates under a 10 %-drop
+    :class:`DropPlan`: the churned run (same noise keys, W degraded per
+    epoch) must stay within the neighborhood envelope of the no-churn run,
+    evaluated on the always-alive agents (dead agents freeze — correct, but
+    not progress).  Raises on failure — the CI contract for ``--churn``."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import DropPlan, ElasticSchedule, StaticSchedule, ring
+    from repro.data import logistic_problem, quadratic_problem
+
+    gates = {}
+    n = 32
+    base = StaticSchedule(ring(n))
+
+    # --- §E.1 quadratic: consensus floor within envelope -------------------
+    steps = 1500
+    plan = DropPlan.random(n, 0.10, seed=3, n_epochs=6, epoch_len=250)
+    sched = ElasticSchedule(base, plan)
+    sched.check_assumption1()
+    alive = plan.always_alive()
+    aj = jnp.asarray(alive)
+    W_churn = _step_W_table(sched, steps)
+    W_flat = np.broadcast_to(ring(n).dense_matrix().astype(np.float32),
+                             (steps, n, n))
+    stoch, _, x_opt, zeta2 = quadratic_problem(n, d=10, p=20, c=1.0,
+                                               sigma=0.05, seed=0)
+    x0 = jnp.zeros((n, 10))
+    err = lambda x: jnp.mean(jnp.sum((x[aj] - x_opt[None]) ** 2, -1))
+    e_flat = _edm_churn_trajectory(stoch, x0, W_flat, alpha=0.05, beta=0.9,
+                                   seed=0, eval_fn=err)
+    e_churn = _edm_churn_trajectory(stoch, x0, W_churn, alpha=0.05, beta=0.9,
+                                    seed=0, eval_fn=err)
+    floor_f = float(np.mean(e_flat[-150:]))
+    floor_c = float(np.mean(e_churn[-150:]))
+    assert floor_c <= 3.0 * floor_f + 1e-8, \
+        f"quadratic churn gate: churned floor {floor_c:.3e} vs " \
+        f"no-churn {floor_f:.3e}"
+    assert floor_c < float(e_churn[0]), "quadratic churn gate: no progress"
+    gates["quadratic"] = {
+        "steps": steps, "zeta2": zeta2, "drop_rate": 0.10,
+        "always_alive": int(len(alive)),
+        "floor_nochurn": floor_f, "floor_churn": floor_c,
+        "ratio": round(floor_c / max(floor_f, 1e-12), 3)}
+    if verbose:
+        print(f"  churn gate quadratic: nochurn={floor_f:.3e} "
+              f"churn={floor_c:.3e} ratio={gates['quadratic']['ratio']}")
+
+    # --- §E.2 logistic: mean-iterate loss within envelope -------------------
+    steps = 800
+    plan = DropPlan.random(n, 0.10, seed=5, n_epochs=5, epoch_len=160)
+    sched = ElasticSchedule(base, plan)
+    sched.check_assumption1()
+    alive = plan.always_alive()
+    aj = jnp.asarray(alive)
+    W_churn = _step_W_table(sched, steps)
+    W_flat = np.broadcast_to(ring(n).dense_matrix().astype(np.float32),
+                             (steps, n, n))
+    stoch, _, mean_loss = logistic_problem(n, d=20, m=500, seed=0)
+    x0 = jnp.zeros((n, 20))
+    lloss = lambda x: mean_loss(jnp.mean(x[aj], axis=0))
+    l_flat = _edm_churn_trajectory(stoch, x0, W_flat, alpha=0.1, beta=0.9,
+                                   seed=1, eval_fn=lloss)
+    l_churn = _edm_churn_trajectory(stoch, x0, W_churn, alpha=0.1, beta=0.9,
+                                    seed=1, eval_fn=lloss)
+    fin_f = float(np.mean(l_flat[-80:]))
+    fin_c = float(np.mean(l_churn[-80:]))
+    assert fin_c <= 1.10 * fin_f + 1e-8, \
+        f"logistic churn gate: churned {fin_c:.4f} vs no-churn {fin_f:.4f}"
+    gates["logistic"] = {
+        "steps": steps, "drop_rate": 0.10, "always_alive": int(len(alive)),
+        "loss_nochurn": fin_f, "loss_churn": fin_c,
+        "ratio": round(fin_c / max(fin_f, 1e-12), 4)}
+    if verbose:
+        print(f"  churn gate logistic: nochurn={fin_f:.4f} "
+              f"churn={fin_c:.4f} ratio={gates['logistic']['ratio']}")
+    return gates
+
+
+def write_elastic_bench_json(rows: List[dict], gates: dict) -> str:
+    """Persist the churn sweep + divergence gates to BENCH_elastic.json at
+    the repo root."""
+    payload = {
+        "bench": "gossip_elastic_churn",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "note": (
+            "Liveness-masked gossip under deterministic churn (DESIGN §8). "
+            "Every row's schedule passed the per-epoch Assumption-1 "
+            "transfer check (degraded rounds doubly stochastic, positive "
+            "diagonal, dead rows/cols identity, survivor period product "
+            "contracting) and the masked-ppermute == dense-oracle "
+            "equivalence gate before timing.  wire_bytes_per_step drops "
+            "with the drop rate because dead agents' rows leave the wire "
+            "(one permute per nonzero survivor shift); divergence_gates "
+            "carry the backend-independent convergence contract under a "
+            "10% drop plan, evaluated on the always-alive agents."),
+        "results": rows,
+        "divergence_gates": gates,
+    }
+    with open(BENCH_ELASTIC_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return BENCH_ELASTIC_JSON
+
+
+def _elastic_csv_rows(rows: List[dict]) -> List[str]:
+    from .common import csv_row
+    return [csv_row(
+        f"gossip_elastic/{row['schedule']}/{row['config']}"
+        f"/drop={row['drop_rate']}",
+        row["us_per_step"],
+        f"A={row['agents']};wire_step={row['wire_bytes_per_step']};"
+        f"permutes={row['permutes_per_step']};gap={row['gap_min']}")
+        for row in rows]
+
+
+def _elastic_subprocess(iters: int = 20) -> List[dict]:
+    """Run :func:`elastic_sweep` under an 8-device host platform."""
+    return _bench_subprocess(["--churn-inner", "--iters", str(iters)],
+                             _ELASTIC_MARKER, 8, "elastic churn sweep")
+
+
+# ---------------------------------------------------------------------------
 # BLOCK_ROWS autotune (ROADMAP "tune BLOCK_ROWS", CPU-measurable half)
 # ---------------------------------------------------------------------------
 
@@ -954,10 +1202,25 @@ def _cli() -> None:
                          "BENCH_shard.json")
     ap.add_argument("--sharded-inner", action="store_true",
                     help="(inner) sharded sweep; needs 8 devices")
+    ap.add_argument("--churn", action="store_true",
+                    help="elastic churn sweep (DESIGN §8; in an 8-device "
+                         "subprocess): us/step + wire bytes vs drop rate "
+                         "with the masked==dense equivalence gate, plus "
+                         "the churn divergence gates; writes "
+                         "BENCH_elastic.json")
+    ap.add_argument("--churn-inner", action="store_true",
+                    help="(inner) elastic churn sweep; needs 8 devices")
     args = ap.parse_args()
 
     if args.sweep:
         print(_SWEEP_MARKER + json.dumps(sweep()))
+    elif args.churn_inner:
+        print(_ELASTIC_MARKER + json.dumps(elastic_sweep(iters=args.iters)))
+    elif args.churn:
+        rows = _elastic_subprocess(iters=args.iters)
+        print("\n".join(_elastic_csv_rows(rows)))
+        gates = churn_divergence_gates()
+        print(f"wrote {write_elastic_bench_json(rows, gates)}")
     elif args.sharded_inner:
         print(_SHARD_MARKER + json.dumps(sharded_sweep(iters=args.iters)))
     elif args.sharded:

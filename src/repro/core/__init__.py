@@ -11,6 +11,10 @@ from .schedule import (  # noqa: F401
     GossipSchedule, StaticSchedule, RoundRobinExp, AlternatingHierarchical,
     make_schedule, wire_bytes_per_step,
 )
+from .elastic import (  # noqa: F401
+    LivenessMask, MaskedTopology, degrade_round, DropPlan, ElasticSchedule,
+    StragglerPlan,
+)
 from .optimizers import (  # noqa: F401
     DecOptimizer, make_optimizer, make_edm_bus, ALGORITHMS,
 )

@@ -1,0 +1,495 @@
+"""Elastic fault-tolerant gossip: liveness masks, drop plans, stragglers.
+
+Everything before this module assumes a fixed, healthy agent set; the
+paper's Assumption 1 (doubly stochastic W with positive diagonal) is
+exactly what a real fleet loses when an agent drops and its row of W(t)
+silently stops summing to one.  This module makes the Assumption-1
+contract survive churn (DESIGN §8):
+
+* :class:`LivenessMask` — one alive/dead bit per agent.
+* :func:`degrade_round` — rewrite one gossip round's :class:`Topology`
+  under a mask via **survivor-rank rewiring**: each circulant term with
+  linearized global shift ``s`` becomes, on the ``m`` survivors ordered by
+  global index, the rank-space rotation by ``s mod m`` (dead agents map to
+  themselves).  Every degraded term is therefore a permutation of the
+  survivors ⊕ identity on the dead — so the degraded round is doubly
+  stochastic *by construction* for arbitrary base rounds (including the
+  asymmetric one-peer rounds), keeps a positive diagonal, and the survivor
+  block stays circulant: any base round carrying a ±1 shift keeps the
+  survivor ring connected, so the degraded period product contracts
+  whenever ≥ 2 agents stay alive the whole period.  Terms whose survivor
+  shift collapses to 0 (mod m) fold into the self term, so no degenerate
+  identity permute ever reaches the wire.
+* :class:`DropPlan` — a deterministic step-indexed sequence of liveness
+  epochs (churn fault-injection; JSON round-trippable for ``--churn``).
+* :class:`ElasticSchedule` — a :class:`GossipSchedule` whose round list is
+  the base schedule's rounds degraded per epoch; ``round_index`` maps the
+  global step to (epoch, base round) and ``check_assumption1`` asserts the
+  per-epoch Assumption-1 transfer: every degraded round doubly stochastic,
+  nonnegative, positive diagonal, dead rows/cols exactly identity, and the
+  epoch's survivor-block period product contracting.
+* :class:`StragglerPlan` — a step-indexed set of LATE gossip terms for the
+  overlap pipeline: a late payload slot degrades its term to self-weight
+  instead of blocking (``make_overlap_mixer``'s ``complete(..., late=)``).
+
+Dead agents freeze: their x/m/ψ rows ride along under weight-1 self terms,
+untouched by any degraded round, so re-admission is a pure checkpoint
+resize (:func:`repro.train.checkpoint.resize_state`).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import functools
+import json
+import os
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .schedule import GossipSchedule
+from .topology import ShiftTerm, Topology, matrix_lam
+
+__all__ = [
+    "LivenessMask", "MaskedTopology", "degrade_round", "DropPlan",
+    "ElasticSchedule", "StragglerPlan",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LivenessMask:
+    """One alive bit per agent.  ``survivors`` are ordered by global index;
+    ``rank`` is each survivor's position on the degraded survivor ring —
+    the coordinate :func:`degrade_round`'s rewiring rotates."""
+
+    alive: Tuple[bool, ...]
+
+    @classmethod
+    def of(cls, alive: Iterable) -> "LivenessMask":
+        return cls(tuple(bool(a) for a in alive))
+
+    @property
+    def n(self) -> int:
+        return len(self.alive)
+
+    @property
+    def m(self) -> int:
+        return sum(self.alive)
+
+    @property
+    def survivors(self) -> np.ndarray:
+        return np.flatnonzero(np.asarray(self.alive, dtype=bool))
+
+    def rank(self) -> np.ndarray:
+        """Survivor rank per agent (-1 for dead)."""
+        r = np.full(self.n, -1, dtype=np.int64)
+        r[self.survivors] = np.arange(self.m)
+        return r
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedTopology(Topology):
+    """A degraded gossip round: explicit per-term source maps + per-agent
+    weight columns instead of pure circulant shifts.
+
+    ``terms[k]`` is a synthetic ``ShiftTerm("masked", sigma_k, w_k)`` whose
+    ``shift`` is the survivor-rank rotation (0 = the self term) and whose
+    ``weight`` is the survivor weight; ``sources[k][i]`` / ``weights[k][i]``
+    carry the full per-agent map (dead agents: source = self, weight = 1 on
+    the self term, 0 elsewhere).  ``term_sources`` is overridden, so the
+    dense oracle, the shifts engine's gather fallback and the ppermute
+    engine's explicit source→target permute lists all derive from the same
+    map — masking cannot drift between engines.
+    """
+
+    sources: Tuple[Tuple[int, ...], ...] = ()
+    weights: Tuple[Tuple[float, ...], ...] = ()
+    alive: Tuple[bool, ...] = ()
+
+    def _term_index(self, t: ShiftTerm) -> int:
+        # degraded terms are deduped by survivor shift, so index by it
+        for k, tk in enumerate(self.terms):
+            if tk.shift == t.shift:
+                return k
+        raise KeyError(t)
+
+    def term_sources(self, t: ShiftTerm) -> np.ndarray:
+        return np.asarray(self.sources[self._term_index(t)], dtype=np.int64)
+
+    def term_weights(self, t: ShiftTerm) -> np.ndarray:
+        """Per-agent weight column of term ``t`` (dead agents carry their
+        frozen self weight here — the engines apply it agent-pointwise)."""
+        return np.asarray(self.weights[self._term_index(t)],
+                          dtype=np.float64)
+
+    def dense_matrix(self) -> np.ndarray:
+        n = self.n_agents
+        W = np.zeros((n, n), dtype=np.float64)
+        idx = np.arange(n)
+        for src, w in zip(self.sources, self.weights):
+            W[idx, np.asarray(src)] += np.asarray(w)
+        return W
+
+    def lam(self) -> float:
+        # degraded rounds are asymmetric in general — eigvalsh is wrong
+        return matrix_lam(self.dense_matrix())
+
+    def wire_rows(self, agents_per_device: int = 1,
+                  engine: str = "ppermute") -> int:
+        """Total agent-rows on the wire for one application (all devices).
+
+        B = 1 ppermute ships one row per agent whose source isn't itself
+        (one collective-permute per nonzero survivor shift); the blocked
+        masked path (B > 1) falls back to an agent-axis all-gather
+        (DESIGN §8 fallback matrix), as does the dense engine."""
+        A = self.n_agents
+        B = agents_per_device
+        if engine == "dense" or (engine == "ppermute" and B > 1):
+            return (A - B) * (A // B)
+        idx = np.arange(A)
+        return sum(int(np.sum(np.asarray(src) != idx)) for src in self.sources)
+
+
+def _linear_shift(t: ShiftTerm, grid_shape: Tuple[int, int]) -> int:
+    """A term's shift linearized onto the flat agent index: flat/intra
+    shifts move by ``shift`` consecutive agents, inter shifts by whole
+    pods (``shift * D``)."""
+    P, D = grid_shape
+    if t.level in ("flat", "intra"):
+        return t.shift
+    if t.level == "inter":
+        return t.shift * D
+    raise ValueError(t.level)
+
+
+def degrade_round(topo: Topology, alive) -> Topology:
+    """Rewrite one gossip round for the given liveness mask.
+
+    Survivor-rank rewiring: a term with linearized shift ``s`` maps alive
+    agent ``i`` to the survivor ``s`` ranks behind it on the survivor ring
+    (``sigma = s mod m``); dead agents map to themselves.  Terms sharing a
+    survivor shift merge (their weights add), and ``sigma = 0`` terms fold
+    into the self term — so every emitted nonzero term is one genuine
+    permutation of the survivors, never an identity permute.
+
+    Returns ``topo`` unchanged (same object) when every agent is alive, so
+    the healthy path stays bit-identical to the un-masked engines.
+    """
+    mask = alive if isinstance(alive, LivenessMask) else LivenessMask.of(alive)
+    n = topo.n_agents
+    assert mask.n == n, (mask.n, n)
+    m = mask.m
+    assert m >= 1, "degrade_round needs at least one alive agent"
+    if m == n:
+        return topo
+    surv = mask.survivors
+    rank = mask.rank()
+    gs = topo.grid_shape()
+    dead = np.flatnonzero(~np.asarray(mask.alive, dtype=bool))
+
+    # merge base terms by survivor shift (weights add; sigma=0 is the self)
+    sigma_w: Dict[int, float] = {}
+    order: list = []
+    for t in topo.terms:
+        sigma = _linear_shift(t, gs) % m
+        if sigma not in sigma_w:
+            sigma_w[sigma] = 0.0
+            order.append(sigma)
+        sigma_w[sigma] += t.weight
+    assert 0 in sigma_w and sigma_w[0] > 0, \
+        f"{topo.name}: round has no positive self weight to degrade onto"
+
+    terms, sources, weights = [], [], []
+    for sigma in order:
+        w = sigma_w[sigma]
+        src = np.arange(n)
+        src[surv] = surv[(rank[surv] - sigma) % m]
+        wcol = np.zeros(n)
+        wcol[surv] = w
+        wcol[dead] = 1.0 if sigma == 0 else 0.0
+        terms.append(ShiftTerm("masked", int(sigma), float(w)))
+        sources.append(tuple(int(s) for s in src))
+        weights.append(tuple(float(x) for x in wcol))
+    return MaskedTopology(
+        name=f"masked({topo.name},m={m})", n_agents=n, terms=tuple(terms),
+        grid=None, sources=tuple(sources), weights=tuple(weights),
+        alive=tuple(mask.alive))
+
+
+# ---------------------------------------------------------------------------
+# deterministic churn plans
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DropPlan:
+    """A deterministic step-indexed liveness plan: a sorted sequence of
+    epochs ``(start_step, alive mask)``; the mask of the last epoch whose
+    start is ≤ step applies.  The first epoch must start at 0.
+
+    JSON wire format (``--churn``; path, inline string or dict)::
+
+        {"n_agents": 8,
+         "epochs": [{"start": 0, "down": []},
+                    {"start": 8, "down": [3, 5]}]}
+
+    (``"alive": [...]`` is accepted in place of ``"down"``.)
+    """
+
+    n_agents: int
+    epochs: Tuple[Tuple[int, Tuple[bool, ...]], ...]
+
+    def __post_init__(self):
+        assert self.epochs, "DropPlan needs at least one epoch"
+        starts = [s for s, _ in self.epochs]
+        assert starts[0] == 0, f"first epoch must start at step 0: {starts}"
+        assert all(a < b for a, b in zip(starts, starts[1:])), \
+            f"epoch starts must be strictly increasing: {starts}"
+        for s, alive in self.epochs:
+            assert len(alive) == self.n_agents, (s, len(alive), self.n_agents)
+            assert any(alive), f"epoch @{s} leaves no agent alive"
+
+    @property
+    def n_epochs(self) -> int:
+        return len(self.epochs)
+
+    @property
+    def starts(self) -> Tuple[int, ...]:
+        return tuple(s for s, _ in self.epochs)
+
+    def epoch_index(self, step):
+        """Epoch containing ``step`` — Python int for concrete steps,
+        traced int32 (searchsorted) for traced ones."""
+        if isinstance(step, (int, np.integer)):
+            return bisect.bisect_right(self.starts, int(step)) - 1
+        import jax.numpy as jnp
+        starts = jnp.asarray(self.starts, jnp.int32)
+        return jnp.searchsorted(starts, jnp.asarray(step, jnp.int32),
+                                side="right") - 1
+
+    def alive_at(self, step: int) -> np.ndarray:
+        return np.asarray(self.epochs[self.epoch_index(int(step))][1],
+                          dtype=bool)
+
+    def always_alive(self) -> np.ndarray:
+        """Agents alive in every epoch — the set the divergence gates
+        evaluate (dead agents freeze, which is correct but not progress)."""
+        acc = np.ones(self.n_agents, dtype=bool)
+        for _, alive in self.epochs:
+            acc &= np.asarray(alive, dtype=bool)
+        return np.flatnonzero(acc)
+
+    # ---- construction / serialization -----------------------------------
+    @classmethod
+    def from_events(cls, n_agents: int,
+                    events: Sequence[Tuple[int, Iterable[int]]]) -> "DropPlan":
+        """``events`` = [(start_step, down_agent_ids), ...]."""
+        epochs = []
+        for start, down in events:
+            alive = np.ones(n_agents, dtype=bool)
+            alive[list(down)] = False
+            epochs.append((int(start), tuple(bool(a) for a in alive)))
+        return cls(n_agents, tuple(epochs))
+
+    @classmethod
+    def from_json(cls, spec: Any) -> "DropPlan":
+        """Accepts a dict, an inline JSON string, or a path to a file."""
+        if isinstance(spec, str):
+            spec = (json.loads(spec) if spec.lstrip().startswith("{")
+                    else json.load(open(spec)))
+        n = int(spec["n_agents"])
+        epochs = []
+        for e in spec["epochs"]:
+            if "alive" in e:
+                alive = tuple(bool(a) for a in e["alive"])
+            else:
+                mask = np.ones(n, dtype=bool)
+                mask[list(e.get("down", []))] = False
+                alive = tuple(bool(a) for a in mask)
+            epochs.append((int(e["start"]), alive))
+        return cls(n, tuple(epochs))
+
+    def to_json(self) -> dict:
+        return {"n_agents": self.n_agents,
+                "epochs": [{"start": s,
+                            "down": [int(i) for i in
+                                     np.flatnonzero(~np.asarray(a, bool))]}
+                           for s, a in self.epochs]}
+
+    @classmethod
+    def random(cls, n_agents: int, drop_rate: float, *, seed: int = 0,
+               n_epochs: int = 4, epoch_len: int = 8,
+               min_alive: int = 2) -> "DropPlan":
+        """Deterministic random churn: each epoch drops each non-anchor
+        agent independently with probability ``drop_rate``; the first
+        ``min_alive`` agents are anchors (never dropped), so at least
+        ``min_alive`` agents stay alive the whole plan and the period
+        product keeps a contracting survivor block."""
+        assert 0.0 <= drop_rate < 1.0, drop_rate
+        assert 1 <= min_alive <= n_agents, (min_alive, n_agents)
+        rng = np.random.default_rng(seed)
+        epochs = []
+        for e in range(n_epochs):
+            alive = np.ones(n_agents, dtype=bool)
+            if drop_rate > 0.0:
+                roll = rng.random(n_agents) < drop_rate
+                roll[:min_alive] = False
+                alive &= ~roll
+            epochs.append((e * epoch_len, tuple(bool(a) for a in alive)))
+        return cls(n_agents, tuple(epochs))
+
+
+# ---------------------------------------------------------------------------
+# liveness-masked schedule
+# ---------------------------------------------------------------------------
+
+class ElasticSchedule(GossipSchedule):
+    """A base :class:`GossipSchedule` degraded per :class:`DropPlan` epoch.
+
+    ``rounds`` flattens to (epoch × base round): round index of global step
+    t is ``epoch_index(t) · base.period + t % base.period``.  Epoch starts
+    must be multiples of the base period, so the liveness mask is constant
+    across every period — each degraded round is then block diagonal
+    (survivor mixing ⊕ identity on the dead) and Assumption 1 transfers
+    per epoch: the period product restricted to that epoch's survivors is
+    doubly stochastic with spectral gap > 0 whenever ≥ 2 agents survive.
+    """
+
+    def __init__(self, base: GossipSchedule, plan: DropPlan):
+        assert plan.n_agents == base.n_agents, \
+            (plan.n_agents, base.n_agents)
+        p = base.period
+        for start, _ in plan.epochs:
+            assert start % p == 0, \
+                f"epoch start {start} must align to the base period {p} " \
+                f"(the liveness mask must be constant across each period)"
+        rounds = tuple(degrade_round(r, alive)
+                       for _, alive in plan.epochs for r in base.rounds)
+        super().__init__(name=f"elastic({base.name})",
+                         n_agents=base.n_agents, rounds=rounds)
+        object.__setattr__(self, "base", base)
+        object.__setattr__(self, "plan", plan)
+
+    def round_index(self, step):
+        p = self.base.period
+        return self.plan.epoch_index(step) * p + step % p
+
+    def round(self, step: int) -> Topology:
+        return self.rounds[int(self.round_index(int(step)))]
+
+    # ---- per-epoch Assumption-1 transfer ---------------------------------
+    def epoch_rounds(self, e: int) -> Tuple[Topology, ...]:
+        p = self.base.period
+        return self.rounds[e * p:(e + 1) * p]
+
+    def epoch_product(self, e: int) -> np.ndarray:
+        W = np.eye(self.n_agents)
+        for topo in self.epoch_rounds(e):
+            W = topo.dense_matrix() @ W
+        return W
+
+    def epoch_stats(self) -> list:
+        """Per-epoch survivor-block spectral stats (the degraded λ with
+        which EDM's bounds transfer for that epoch)."""
+        out = []
+        for e, (start, alive) in enumerate(self.plan.epochs):
+            surv = np.flatnonzero(np.asarray(alive, bool))
+            sub = self.epoch_product(e)[np.ix_(surv, surv)]
+            lam = matrix_lam(sub) if len(surv) > 1 else 0.0
+            out.append({"epoch": e, "start": start, "alive": len(surv),
+                        "lambda": lam, "gap": 1.0 - lam})
+        return out
+
+    def product_spectral_stats(self) -> dict:
+        stats = self.epoch_stats()
+        return {
+            "name": self.name,
+            "n": self.n_agents,
+            "period": self.base.period,
+            "epochs": self.plan.n_epochs,
+            "lambda": max(s["lambda"] for s in stats),
+            "gap": min(s["gap"] for s in stats),
+            "permutes_per_step": max(
+                sum(1 for t in r.terms if t.shift != 0) for r in self.rounds),
+        }
+
+    def check_assumption1(self, atol: float = 1e-10) -> None:
+        """Assumption-1 transfer under churn (DESIGN §8): every degraded
+        round is doubly stochastic, nonnegative, positive diagonal, and
+        exactly identity on its dead rows/columns; each epoch's period
+        product restricted to the epoch's survivors is doubly stochastic
+        with spectral gap > 0 whenever ≥ 2 agents survive it."""
+        n = self.n_agents
+        ones = np.ones(n)
+        for e, (start, alive) in enumerate(self.plan.epochs):
+            surv = np.flatnonzero(np.asarray(alive, bool))
+            dead = np.flatnonzero(~np.asarray(alive, bool))
+            m = len(surv)
+            for r, topo in enumerate(self.epoch_rounds(e)):
+                W = topo.dense_matrix()
+                tag = f"{self.name} epoch {e} round {r}"
+                assert np.allclose(W @ ones, ones, atol=atol), \
+                    f"{tag}: W 1 != 1"
+                assert np.allclose(ones @ W, ones, atol=atol), \
+                    f"{tag}: 1ᵀ W != 1ᵀ"
+                assert np.all(W >= -atol), f"{tag}: negative w_ij"
+                assert np.all(np.diag(W) > 0), f"{tag}: w_ii = 0"
+                if len(dead):
+                    eye = np.eye(n)
+                    assert np.array_equal(W[dead], eye[dead]), \
+                        f"{tag}: dead rows not identity"
+                    assert np.array_equal(W[:, dead], eye[:, dead]), \
+                        f"{tag}: dead columns not identity"
+            if m >= 2:
+                sub = self.epoch_product(e)[np.ix_(surv, surv)]
+                mo = np.ones(m)
+                assert np.allclose(sub @ mo, mo, atol=atol), \
+                    f"{self.name} epoch {e}: survivor product not row-stochastic"
+                assert np.allclose(mo @ sub, mo, atol=atol), \
+                    f"{self.name} epoch {e}: survivor product not col-stochastic"
+                gap = 1.0 - matrix_lam(sub)
+                assert gap > atol, \
+                    f"{self.name} epoch {e}: survivor product not " \
+                    f"contracting (gap={gap})"
+
+
+# ---------------------------------------------------------------------------
+# straggler plans (overlap pipeline, DESIGN §8)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPlan:
+    """Step-indexed LATE gossip terms for the overlapped pipeline.
+
+    ``late[(step, (k, ...))]`` marks payload-stack slots ``k`` late at
+    ``step``: the combine substitutes each late slot's payload with the
+    round's self payload under the slot's original weight — exactly the
+    self-weight absorption ``W + Σ_late w_k (I − P_k)``, which preserves
+    double stochasticity and never multiplies the late (possibly garbage)
+    buffer, so a straggler degrades mixing instead of blocking or NaNing
+    the step.  ``n_terms`` must equal the overlap mixer's padded stack
+    arity K (``complete.n_terms``).
+    """
+
+    n_terms: int
+    late: Tuple[Tuple[int, Tuple[int, ...]], ...] = ()
+
+    def __post_init__(self):
+        for step, ks in self.late:
+            assert step >= 0, step
+            assert all(0 <= k < self.n_terms for k in ks), (step, ks)
+
+    @functools.cached_property
+    def _table(self) -> np.ndarray:
+        """(T+1, K) bool; row T (all-False) is the every-later-step row."""
+        T = 1 + max((s for s, _ in self.late), default=-1)
+        tab = np.zeros((T + 1, self.n_terms), dtype=bool)
+        for step, ks in self.late:
+            tab[step, list(ks)] = True
+        return tab
+
+    def late_at(self, step):
+        """(K,) bool late mask for ``step`` (concrete or traced)."""
+        import jax.numpy as jnp
+        tab = jnp.asarray(self._table)
+        idx = jnp.minimum(jnp.asarray(step, jnp.int32), tab.shape[0] - 1)
+        return tab[idx]

@@ -89,9 +89,33 @@ def mix_dense(topo: Topology, tree: Any) -> Any:
     )(tree)
 
 
+def _is_masked(topo: Topology) -> bool:
+    """Liveness-masked round (:class:`repro.core.elastic.MaskedTopology`)?
+    Duck-typed on the per-agent weight column API so core.mixing never
+    imports core.elastic."""
+    return hasattr(topo, "term_weights")
+
+
+def _masked_tables(topo: Topology):
+    """(srcs, wcols) as (T, A) int / f32 numpy tables for a masked round."""
+    srcs = np.stack([topo.term_sources(t) for t in topo.terms]).astype(np.int32)
+    wcols = np.stack([topo.term_weights(t)
+                      for t in topo.terms]).astype(np.float32)
+    return srcs, wcols
+
+
 def _mix_leaf_shifts(topo: Topology, x: jax.Array) -> jax.Array:
     A = x.shape[0]
     assert A == topo.n_agents, (A, topo.n_agents)
+    if _is_masked(topo):
+        # masked rounds have per-agent sources/weights — gather route
+        srcs, wcols = _masked_tables(topo)
+        acc = None
+        for src, w in zip(srcs, wcols):
+            wb = jnp.asarray(w, x.dtype).reshape((A,) + (1,) * (x.ndim - 1))
+            term = x[jnp.asarray(src)] * wb
+            acc = term if acc is None else acc + term
+        return acc
     P, D = topo.grid_shape()
     acc = None
     for t in topo.terms:
@@ -135,6 +159,15 @@ def _agent_axis_info(topo: Topology, mesh, agent_axes):
     split = (B == 1 and len(names) == 2 and topo.grid is not None
              and sizes == topo.grid_shape())
     return names, sizes, split, B
+
+
+def _flat_device_index(names, sizes):
+    """This shard's flat device index along the agent axes (mixed-radix
+    over multi-axis agent meshes; ``lax.axis_index`` takes one name)."""
+    idx = jax.lax.axis_index(names[0])
+    for n, s in zip(names[1:], sizes[1:]):
+        idx = idx * s + jax.lax.axis_index(n)
+    return idx
 
 
 def _blocked_roll(x, shift: int, bloc: int, n_ring: int, n_dev: int,
@@ -276,11 +309,12 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
             assert getattr(l, "ndim", 0) >= 2, \
                 "shard_axes shards leaf dim 1 — leaves need >= 2 dims"
 
+    masked = _is_masked(topo)
     assert transport in ("auto", "ppermute", "ring_dma"), transport
     ring_plan = None
     if transport != "ppermute":
         from repro.kernels import ring_dma
-        eligible = (shard_axes is None
+        eligible = (shard_axes is None and not masked
                     and ring_dma.ring_dma_supported(topo, n_axes=len(names),
                                                     B=B)
                     and all(getattr(l, "ndim", 0) == 3 and l.shape[-1] == 128
@@ -296,14 +330,28 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
             ring_plan = ring_dma.ring_plan(topo)
 
     weights = tuple(float(t.weight) for t in topo.terms)
+    if masked:
+        srcs_np, wcols_np = _masked_tables(topo)
 
-    def combine(payloads):
+    def combine(payloads, ws):
         if use_fused_kernel:
             from repro.kernels.ops import gossip_axpy
-            return gossip_axpy(payloads, weights, interpret=interpret)
+            return gossip_axpy(payloads, ws, interpret=interpret)
         acc = None
-        for w, p in zip(weights, payloads):
+        for w, p in zip(ws, payloads):
             term = w * p
+            acc = term if acc is None else acc + term
+        return acc
+
+    def masked_gather_mix(x):
+        # blocked masked fallback (DESIGN §8): per-agent source maps do not
+        # decompose into blocked rolls, so gather the agent axis and index.
+        xg = jax.lax.all_gather(x, axis_flat, axis=0, tiled=True)  # (A, ...)
+        agents = _flat_device_index(names, sizes) * B + jnp.arange(B)
+        acc = None
+        for src, w in zip(jnp.asarray(srcs_np), jnp.asarray(wcols_np)):
+            wb = w[agents].reshape((B,) + (1,) * (x.ndim - 1))
+            term = xg[src[agents]] * wb.astype(x.dtype)
             acc = term if acc is None else acc + term
         return acc
 
@@ -315,7 +363,20 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
                 ring_dma.ring_combine_shard(x, ring_plan,
                                             axis_name=axis_flat, n_devices=A)
                 for x in leaves)
-        return tuple(combine([permute_term(x, t) for t in topo.terms])
+        if masked and B > 1:
+            return tuple(masked_gather_mix(x) for x in leaves)
+        if masked:
+            # B = 1: the permutes come straight from the masked source maps
+            # (the generic term_sources branch of the wire plan); only the
+            # weights become per-agent — this device's weight column.
+            i = _flat_device_index(names, sizes)
+            wcols = jnp.asarray(wcols_np)
+            ws = [wcols[k, i] for k in range(len(topo.terms))]
+            return tuple(
+                combine([permute_term(x, t) for t in topo.terms], ws)
+                for x in leaves)
+        return tuple(combine([permute_term(x, t) for t in topo.terms],
+                             weights)
                      for x in leaves)
 
     flat, treedef = jax.tree_util.tree_flatten(tree)
@@ -396,18 +457,24 @@ def make_schedule_mixer(sched, engine: str = "shifts", mesh=None,
     global step), so the branch collectives stay SPMD-consistent.  Period-1
     schedules skip the switch entirely and are bit-identical to the static
     ``make_mixer`` path.
+
+    The step→round map is the schedule's ``round_index`` — plain schedules
+    fold the step mod the period; an
+    :class:`~repro.core.elastic.ElasticSchedule` additionally selects the
+    liveness epoch, so churn rides through here with no engine changes.
     """
     mixers = [make_mixer(r, engine, mesh=mesh, agent_axes=agent_axes,
                          use_fused_kernel=use_fused_kernel,
                          shard_axes=shard_axes)
               for r in sched.rounds]
-    if sched.period == 1:
+    if len(mixers) == 1:
         return lambda tree, step=0: mixers[0](tree)
 
     def mix(tree, step=0):
-        if isinstance(step, int):
-            return mixers[step % sched.period](tree)
-        return jax.lax.switch(step % sched.period, mixers, tree)
+        r = sched.round_index(step)
+        if isinstance(r, (int, np.integer)):
+            return mixers[int(r)](tree)
+        return jax.lax.switch(r, mixers, tree)
 
     return mix
 
@@ -439,26 +506,95 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
     pipeline's *algorithmic* semantics (gradients at the pre-mix iterate)
     are engine-independent and single-device-testable even though only the
     ppermute engine gains overlap.
+
+    Straggler degradation (DESIGN §8): ``complete(payloads, step, late=)``
+    takes an optional ``(K,)`` bool mask of LATE payload slots
+    (:meth:`repro.core.elastic.StragglerPlan.late_at`).  A late slot's
+    payload is replaced by the round's SELF payload under the slot's
+    original weight *before* the combine — the self-weight absorption
+    ``W_eff = Σ_{k∉late} w_k P_k + (Σ_{k∈late} w_k) I``, which keeps W_eff
+    doubly stochastic with positive diagonal and never reads the late
+    (possibly garbage) buffer, so a straggler degrades mixing instead of
+    blocking or NaNing the step.  Rounds without an explicit self term use
+    a weight-0 pad slot, which always holds the unpermuted (self) payload.
+    The dense engine supports ``late`` through an explicit per-term W_eff
+    oracle (the straggler tests' reference); shifts has no payload stack
+    and rejects it.  ``complete.n_terms`` exposes the stack arity K for
+    :class:`~repro.core.elastic.StragglerPlan` validation.
     """
+    R = len(sched.rounds)
+    K = max(len(r.terms) for r in sched.rounds)
+
+    def self_index(topo):
+        si = next((k for k, t in enumerate(topo.terms) if t.shift == 0),
+                  len(topo.terms))
+        assert si < K, \
+            f"{topo.name}: no self term and no pad slot to degrade onto"
+        return si
+
     if engine != "ppermute":
         mix = make_schedule_mixer(sched, engine, mesh=mesh,
                                   agent_axes=agent_axes,
                                   use_fused_kernel=use_fused_kernel,
                                   shard_axes=shard_axes)
-        return (lambda x, step=0: x), mix
+        if engine == "dense":
+            # per-term dense stacks: Wk = diag(wcol_k) P_k, Ik = diag(wcol_k)
+            n = sched.n_agents
+            Wk_np = np.zeros((R, K, n, n), np.float32)
+            Ik_np = np.zeros((R, K, n, n), np.float32)
+            idx = np.arange(n)
+            for r, topo in enumerate(sched.rounds):
+                for k, t in enumerate(topo.terms):
+                    wcol = (topo.term_weights(t) if _is_masked(topo)
+                            else np.full(n, t.weight))
+                    Wk_np[r, k, idx, topo.term_sources(t)] = wcol
+                    Ik_np[r, k, idx, idx] = wcol
+            Wk_t, Ik_t = jnp.asarray(Wk_np), jnp.asarray(Ik_np)
+
+        def complete(x, step=0, late=None):
+            if late is None:
+                return mix(x, step)
+            assert engine == "dense", \
+                "straggler degradation needs the ppermute or dense engine"
+            r = sched.round_index(step)
+            lateb = jnp.asarray(late).reshape(K, 1, 1)
+            W_eff = jnp.sum(jnp.where(lateb, Ik_t[r], Wk_t[r]), axis=0)
+            return accumulate_f32(functools.partial(
+                jax.tree.map, functools.partial(_mix_leaf_dense, W_eff)))(x)
+
+        complete.n_terms = K
+        return (lambda x, step=0: x), complete
 
     from jax.sharding import PartitionSpec as P
 
     assert mesh is not None and agent_axes is not None, \
         "overlap mixer needs mesh= and agent_axes= for the ppermute engine"
-    K = max(len(r.terms) for r in sched.rounds)
-    w_np = np.zeros((sched.period, K), np.float32)
-    for r, topo in enumerate(sched.rounds):
-        w_np[r, :len(topo.terms)] = [t.weight for t in topo.terms]
-    w_table = jnp.asarray(w_np)
+    A = sched.n_agents
+    any_masked = any(_is_masked(r) for r in sched.rounds)
 
-    names0, _, _, _ = _agent_axis_info(sched.rounds[0], mesh, agent_axes)
+    names0, _, _, B0 = _agent_axis_info(sched.rounds[0], mesh, agent_axes)
     axis0 = names0 if len(names0) > 1 else names0[0]
+    if any_masked:
+        assert B0 == 1, \
+            "masked overlap gossip needs one agent per mesh slice (B = 1)"
+
+    # weight table: (R, K) replicated normally; per-agent (R, K, A) columns
+    # sharded over the agent axis when any round is liveness-masked.
+    if any_masked:
+        w_np = np.zeros((R, K, A), np.float32)
+        for r, topo in enumerate(sched.rounds):
+            for k, t in enumerate(topo.terms):
+                w_np[r, k] = (topo.term_weights(t) if _is_masked(topo)
+                              else t.weight)
+        w_spec = P(None, axis0)
+    else:
+        w_np = np.zeros((R, K), np.float32)
+        for r, topo in enumerate(sched.rounds):
+            w_np[r, :len(topo.terms)] = [t.weight for t in topo.terms]
+        w_spec = P()
+    w_table = jnp.asarray(w_np)
+    self_np = np.asarray([self_index(r) for r in sched.rounds], np.int32)
+    self_t = jnp.asarray(self_np)
 
     def make_issue(topo):
         names, sizes, split, B = _agent_axis_info(topo, mesh, agent_axes)
@@ -482,29 +618,46 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
     issues = [make_issue(r) for r in sched.rounds]
 
     def issue(x, step=0):
-        if sched.period == 1:
+        if R == 1:
             return issues[0](x)
-        if isinstance(step, int):
-            return issues[step % sched.period](x)
-        return jax.lax.switch(step % sched.period, issues, x)
+        r = sched.round_index(step)
+        if isinstance(r, (int, np.integer)):
+            return issues[int(r)](x)
+        return jax.lax.switch(r, issues, x)
 
     def combine_body(w, p):
-        # p: (K, B_shard, ...) payload stack for this shard's agent block
+        # p: (K, B_shard, ...) payload stack for this shard's agent block;
+        # w: (K,) replicated round weights, or this agent's (K, 1) column
+        # when the schedule carries masked rounds.
         ops = [p[k] for k in range(K)]
+        ws = [w[k] if w.ndim == 1 else w[k, 0] for k in range(K)]
         if use_fused_kernel:
             from repro.kernels.ops import gossip_axpy
-            return gossip_axpy(ops, w, interpret=interpret)
-        acc = w[0] * ops[0]
+            return gossip_axpy(ops, ws, interpret=interpret)
+        acc = ws[0] * ops[0]
         for k in range(1, K):
-            acc = acc + w[k] * ops[k]
+            acc = acc + ws[k] * ops[k]
         return acc
 
     pay_spec = (P(None, axis0) if shard_axes is None
                 else P(None, axis0, shard_axes))
     out0 = P(axis0) if shard_axes is None else P(axis0, shard_axes)
-    combine = shard_map(combine_body, mesh, (P(), pay_spec), out0)
+    combine = shard_map(combine_body, mesh, (w_spec, pay_spec), out0)
 
-    def complete(payloads, step=0):
-        return combine(w_table[step % sched.period], payloads)
+    def complete(payloads, step=0, late=None):
+        r = sched.round_index(step)
+        if late is not None:
+            # substitute late slots with the round's self payload BEFORE
+            # the combine — original weights then realize the self-weight
+            # absorption W_eff without ever reading the late buffer.
+            if isinstance(r, (int, np.integer)):
+                selfpay = payloads[int(self_np[r])]
+            else:
+                selfpay = jnp.take(payloads, self_t[r], axis=0)
+            lateb = jnp.asarray(late).reshape(
+                (K,) + (1,) * (payloads.ndim - 1))
+            payloads = jnp.where(lateb, selfpay[None], payloads)
+        return combine(w_table[r], payloads)
 
+    complete.n_terms = K
     return issue, complete

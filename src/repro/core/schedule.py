@@ -287,6 +287,11 @@ def wire_bytes_per_step(sched: GossipSchedule, step: int, *,
     A = topo.n_agents
     B = agents_per_device
     n_dev = A // B
+    wire_rows = getattr(topo, "wire_rows", None)
+    if wire_rows is not None:
+        # liveness-masked rounds (core.elastic.MaskedTopology) carry their
+        # own per-agent source maps and account for themselves
+        return wire_rows(B, engine) * elems_per_agent * itemsize
     if engine == "dense":
         rows = (A - B) * n_dev          # every device gathers all remote rows
     elif engine == "shifts":

@@ -80,6 +80,18 @@ def main():
     ap.add_argument("--phi", type=float, default=0.2,
                     help="Dirichlet heterogeneity of the token streams")
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--churn", default="",
+                    help="liveness fault-injection plan (DESIGN §8): a JSON "
+                         "file path or inline JSON DropPlan "
+                         '({"n_agents": N, "epochs": [{"start": 0, '
+                         '"down": [..]}, ..]}); wraps the gossip schedule '
+                         "in an ElasticSchedule whose degraded rounds are "
+                         "re-checked against Assumption 1 per epoch")
+    ap.add_argument("--resume", default="",
+                    help="checkpoint to resume from; the saved agent count "
+                         "may differ from --agents (elastic join/leave): "
+                         "surviving agents restore bit-exactly, re-admitted "
+                         "agents join at the consensus mean with ψ := x")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -106,7 +118,8 @@ def main():
                     packed_bus=args.packed_bus, overlap=args.overlap,
                     remat=False)
     sched = make_gossip_schedule(run, n_agents,
-                                 pods=1 if pod_agents else args.pods)
+                                 pods=1 if pod_agents else args.pods,
+                                 churn=args.churn or None)
     mesh = agent_axes = shard_axes = None
     if args.gossip_engine == "ppermute":
         from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
@@ -145,8 +158,17 @@ def main():
                  cfg.d_model), dtype=jnp.dtype(cfg.dtype))
         return b
 
+    layout = (bus_layout_for(model, n_agents, shards=shards)
+              if use_packed_bus(run) else None)
     state = init_state(model, run, n_agents, jax.random.PRNGKey(0),
                        shards=shards)
+    if args.resume:
+        # elastic join/leave: the checkpoint's agent count may differ from
+        # this run's — survivors restore bit-exactly, joiners take the
+        # consensus mean with ψ := x (DESIGN §8)
+        state = checkpoint.load_state_resized(args.resume, state,
+                                              layout=layout)
+        print(f"resumed <- {args.resume} @ step {int(state['step'])}")
     if pod_agents:
         # place the bus state shard-resident up front: agent axis on 'pod',
         # rows FSDP-sharded over 'data' (state_specs, DESIGN §7)
@@ -175,8 +197,6 @@ def main():
                   f"consensus={float(m['consensus']):.2e} "
                   f"({time.time()-t0:.1f}s)", flush=True)
     if args.ckpt:
-        layout = (bus_layout_for(model, n_agents, shards=shards)
-                  if use_packed_bus(run) else None)
         # full resumable state (params + opt + step + pipeline), stored as
         # logical trees — layout-, sharding- and overlap-mode-independent
         # on disk

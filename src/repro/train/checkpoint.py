@@ -17,12 +17,13 @@ pipeline trajectory exactly.
 from __future__ import annotations
 
 import os
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
 
-__all__ = ["save", "load", "save_state", "load_state"]
+__all__ = ["save", "load", "save_state", "load_state", "resize_state",
+           "load_state_resized"]
 
 _SEP = "|"
 
@@ -154,3 +155,122 @@ def load_state(path: str, like: Any, layout: Optional[Any] = None) -> Any:
         tree["pipeline"] = {"slot": jnp.stack([phi, phi]),
                             "parity": jnp.asarray(pp["parity"], jnp.int32)}
     return tree
+
+
+# ---------------------------------------------------------------------------
+# elastic join/leave: cross-size state resize (DESIGN §8)
+# ---------------------------------------------------------------------------
+
+def resize_state(state: Any, survivors: Sequence[int],
+                 n_agents: int) -> Any:
+    """Re-shape a trainer state from its saved agent set onto ``n_agents``.
+
+    ``survivors`` selects (in order) which saved agents carry over; their
+    rows are taken verbatim, so a shrink — and the A→A identity resize —
+    is bit-exact.  When ``n_agents > len(survivors)``, re-admitted agents
+    are appended with the join policy that keeps the first resumed step
+    exactly the synchronous one for them:
+
+    * ``params`` (x):  the consensus mean over the surviving agents
+      (bus zero-pads stay zero under the mean, so the packed layout
+      contract is preserved);
+    * ``opt["psi"]``:  the new agent's own x row — ψ := x makes the
+      bias-corrected payload φ = ψ₂ + x − ψ collapse to ψ₂ at the next
+      step, i.e. a joining agent re-enters as if at step 0;
+    * every other opt slot (m, trackers, error feedback):  zeros;
+    * the overlap ``pipeline`` slots:  the new x row in both buffers
+      (φ(0) = x(0), the same seeding :func:`~repro.train.trainer.
+      init_state` uses).
+
+    Operates directly on whatever layout the state is in — packed
+    ``(A, rows, 128)`` buses and logical per-leaf trees resize the same
+    way, along axis 0 (axis 1 for the pipeline's ``slot``).
+    """
+    import jax.numpy as jnp
+
+    surv = np.asarray(list(survivors), dtype=np.int64)
+    m = len(surv)
+    assert m <= n_agents, (m, n_agents)
+    pad = n_agents - m
+
+    def keep(l, axis=0):
+        return jnp.take(jnp.asarray(l), jnp.asarray(surv), axis=axis)
+
+    def grow(kept, fill, axis=0):
+        if pad == 0:
+            return kept
+        reps = [1] * kept.ndim
+        reps[axis] = pad
+        return jnp.concatenate([kept, jnp.tile(fill, reps)], axis=axis)
+
+    new_params = jax.tree.map(
+        lambda l: grow(keep(l), keep(l).mean(axis=0, keepdims=True)),
+        state["params"])
+    new_opt = {}
+    for slot, sub in state.get("opt", {}).items():
+        if slot == "psi":
+            new_opt[slot] = jax.tree.map(
+                lambda l, x: jnp.concatenate([keep(l), x[m:]], axis=0)
+                if pad else keep(l), sub, new_params)
+        else:
+            new_opt[slot] = jax.tree.map(
+                lambda l: grow(keep(l),
+                               jnp.zeros_like(keep(l)[:1])), sub)
+    out = dict(state)
+    out["params"] = new_params
+    out["opt"] = new_opt
+    pipe = state.get("pipeline")
+    if pipe is not None:
+        slot = jax.tree.map(
+            lambda l, x: jnp.concatenate(
+                [keep(l, axis=1),
+                 jnp.broadcast_to(x[None, m:],
+                                  (l.shape[0], pad) + x.shape[1:])],
+                axis=1) if pad else keep(l, axis=1),
+            pipe["slot"], new_params)
+        out["pipeline"] = {"slot": slot, "parity": pipe["parity"]}
+    return out
+
+
+def load_state_resized(path: str, like: Any, layout: Optional[Any] = None,
+                       survivors: Optional[Sequence[int]] = None) -> Any:
+    """Restore a checkpoint saved at A agents into a run built at A′.
+
+    The saved agent count is read off the checkpoint itself; the state is
+    loaded against an A-shaped template (the :class:`~repro.core.bus.
+    BusLayout` is agent-count-agnostic, so the SAME ``layout`` serves both
+    sizes) and then re-shaped by :func:`resize_state`.  ``survivors``
+    defaults to the first ``min(A, A′)`` agents; A′ == A with default
+    survivors round-trips bit-identically through :func:`load_state`.
+    """
+    data = np.load(path)
+    pkeys = [k for k in data.files if k.split(_SEP)[0] == "params"]
+    assert pkeys, f"{path}: no params leaves in checkpoint"
+    a_old = int(data[pkeys[0]].shape[0])
+
+    def agent_leaves(sub, a):
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((a,) + tuple(l.shape[1:]),
+                                           l.dtype), sub)
+
+    a_new = jax.tree.leaves(like["params"])[0].shape[0]
+    if a_old == a_new and survivors is None:
+        return load_state(path, like, layout=layout)
+
+    like_old = {}
+    for k, v in like.items():
+        if k == "pipeline":
+            slot = v["slot"]
+            like_old[k] = {
+                "slot": jax.ShapeDtypeStruct(
+                    (slot.shape[0], a_old) + tuple(slot.shape[2:]),
+                    slot.dtype),
+                "parity": v["parity"]}
+        elif k in ("params", "opt"):
+            like_old[k] = agent_leaves(v, a_old)
+        else:
+            like_old[k] = v
+    state_old = load_state(path, like_old, layout=layout)
+    surv = (list(survivors) if survivors is not None
+            else list(range(min(a_old, a_new))))
+    return resize_state(state_old, surv, a_new)

@@ -55,18 +55,32 @@ def make_topology(run: RunConfig, n_agents: int, pods: int = 1) -> Topology:
     raise ValueError(run.topology)
 
 
-def make_gossip_schedule(run: RunConfig, n_agents: int,
-                         pods: int = 1) -> GossipSchedule:
+def make_gossip_schedule(run: RunConfig, n_agents: int, pods: int = 1,
+                         churn=None) -> GossipSchedule:
     """``RunConfig`` → step-indexed gossip schedule (DESIGN §4).
 
     ``gossip_schedule="static"`` wraps :func:`make_topology`'s W;
     ``"round_robin"`` / ``"alt_hier"`` build the time-varying schedules
     (``gossip_period``/``gossip_seed`` are their knobs).
+
+    ``churn`` (DESIGN §8) wraps the result in an
+    :class:`~repro.core.elastic.ElasticSchedule`: a
+    :class:`~repro.core.elastic.DropPlan`, or anything
+    ``DropPlan.from_json`` accepts (path, inline JSON, dict).  The
+    degraded schedule re-checks Assumption 1 per liveness epoch here, so
+    a plan that breaks mixing fails at build time, not mid-run.
     """
     topo = (make_topology(run, n_agents, pods)
             if run.gossip_schedule in ("static", "", None) else None)
-    return make_schedule(run.gossip_schedule, n_agents, topo=topo, pods=pods,
-                         period=run.gossip_period, seed=run.gossip_seed)
+    sched = make_schedule(run.gossip_schedule, n_agents, topo=topo, pods=pods,
+                          period=run.gossip_period, seed=run.gossip_seed)
+    if churn is not None:
+        from repro.core import DropPlan, ElasticSchedule
+        plan = (churn if isinstance(churn, DropPlan)
+                else DropPlan.from_json(churn))
+        sched = ElasticSchedule(sched, plan)
+        sched.check_assumption1()
+    return sched
 
 
 def gossip_round_step(step, gossip_every: int):
@@ -148,7 +162,8 @@ def _cast_mixer(mix, dtype: Optional[str]):
 
 def build_train_step(model: Model, run: RunConfig, topo,
                      use_fused_kernel: bool = False, mesh=None,
-                     agent_axes=None, shard_axes=None) -> Callable:
+                     agent_axes=None, shard_axes=None,
+                     straggler_plan=None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch leaves: (A, per_agent_batch, ...).
@@ -189,6 +204,14 @@ def build_train_step(model: Model, run: RunConfig, topo,
     (the fused kernel is shard_map-wrapped so XLA never gathers the bus
     around an unpartitioned pallas_call), and every bus-shaped
     intermediate is pinned to the ``P(agent_axes, shard_axes)`` sharding.
+
+    ``straggler_plan`` (a :class:`~repro.core.elastic.StragglerPlan`,
+    DESIGN §8) composes with the overlap pipeline only: each step's late
+    slot mask is threaded into ``complete``, degrading late gossip terms
+    to self-weight instead of blocking on their payloads.  Churn rides in
+    through ``topo`` itself — hand an
+    :class:`~repro.core.elastic.ElasticSchedule` and every engine applies
+    the liveness-degraded round of the step's epoch.
     """
     sched = topo if isinstance(topo, GossipSchedule) else StaticSchedule(topo)
     overlap = use_overlap(run)
@@ -268,11 +291,19 @@ def build_train_step(model: Model, run: RunConfig, topo,
             return grads
         return scale_grads(grads, step, lr_sched)
 
+    assert straggler_plan is None or overlap, \
+        "straggler_plan composes with overlap='delayed' only (the " \
+        "synchronous step has no payload stack to degrade)"
+
     if overlap:
         issue, complete = make_overlap_mixer(
             sched, engine=run.gossip_engine, mesh=mesh,
             agent_axes=agent_axes, use_fused_kernel=use_fused_kernel,
             shard_axes=shard_axes)
+        if straggler_plan is not None:
+            assert straggler_plan.n_terms == complete.n_terms, \
+                f"StragglerPlan.n_terms={straggler_plan.n_terms} must match " \
+                f"the overlap payload stack arity K={complete.n_terms}"
         # the delayed pipeline mixes FIRST (the in-flight payload), then
         # runs the local EDM recursion on the mixed iterate — so the
         # optimizer's own mix is the identity and the wire lives in the
@@ -297,7 +328,10 @@ def build_train_step(model: Model, run: RunConfig, topo,
             g_bus = pin_bus(parambus.pack_tree(layout, grads))
             # COMPLETE: weighted combine of the landed payloads, then the
             # bus-resident EDM update on the mixed iterate x(t) = W(t) φ(t).
-            x_mixed = complete(payloads, g_step)
+            # Late slots (straggler_plan) degrade to self-weight (DESIGN §8).
+            late = (straggler_plan.late_at(g_step)
+                    if straggler_plan is not None else None)
+            x_mixed = complete(payloads, g_step, late=late)
             phi_new, new_opt = local_opt.step(x_mixed, g_bus, state["opt"])
             metrics = {
                 "loss": jnp.mean(losses),

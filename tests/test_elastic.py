@@ -1,0 +1,671 @@
+"""Elastic fault-tolerant gossip (DESIGN §8): liveness masks, drop plans,
+degraded schedules, cross-size checkpoints, churn divergence gates.
+
+* :func:`degrade_round` survivor-rank rewiring: doubly stochastic with a
+  positive diagonal for ANY shipped base round, dead rows/cols exactly
+  identity — and the degraded ring(8) → 6 survivors IS ring(6);
+* :class:`DropPlan` JSON round trips, validation, deterministic random
+  plans with never-dropped anchors;
+* :class:`ElasticSchedule` satisfies the per-epoch Assumption-1 transfer
+  for every base schedule family, concrete and traced ``round_index``;
+* degraded ppermute == dense == sharded oracle over {static, round_robin}
+  × {fused, unfused} × {B=1, B=4}, one collective-permute per nonzero
+  survivor shift (HLO pin), straggler ``complete(late=)`` == the
+  self-weight W_eff oracle and never reads the late (NaN) buffer
+  (8-device subprocess);
+* cross-size checkpoints: 8→8 round-trips bitwise, a shrink is bit-exact,
+  joiners take the consensus mean with ψ := x, and an A=8 churn run
+  resumed at A=6 reproduces the uninterrupted degraded trajectory exactly;
+* the §E.1/§E.2 churn divergence gates (10 %-drop plan vs no-churn, same
+  noise keys) hold — the raising gate behind ``gossip_micro --churn``.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DropPlan, ElasticSchedule, LivenessMask,
+                        MaskedTopology, RoundRobinExp, StaticSchedule,
+                        StragglerPlan, degrade_round, exp_graph,
+                        hierarchical, ring, wire_bytes_per_step)
+from repro.core.mixing import mix_dense, mix_shifts
+
+jax.config.update("jax_enable_x64", False)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ,
+       "PYTHONPATH": os.path.join(REPO, "src")
+       + (os.pathsep + os.environ["PYTHONPATH"]
+          if os.environ.get("PYTHONPATH") else "")}
+
+
+# ---------------------------------------------------------------------------
+# DropPlan: construction, validation, JSON wire format
+# ---------------------------------------------------------------------------
+
+def test_drop_plan_json_round_trip(tmp_path):
+    plan = DropPlan.from_events(8, [(0, []), (8, [3, 5]), (16, [1])])
+    spec = plan.to_json()
+    assert DropPlan.from_json(spec) == plan                   # dict
+    assert DropPlan.from_json(json.dumps(spec)) == plan       # inline JSON
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(spec))
+    assert DropPlan.from_json(str(p)) == plan                 # file path
+    # "alive" is accepted in place of "down"
+    spec2 = {"n_agents": 4,
+             "epochs": [{"start": 0, "alive": [True, True, False, True]}]}
+    assert DropPlan.from_json(spec2).alive_at(0).tolist() == \
+        [True, True, False, True]
+
+
+def test_drop_plan_validation():
+    with pytest.raises(AssertionError):   # first epoch must start at 0
+        DropPlan.from_events(4, [(2, [])])
+    with pytest.raises(AssertionError):   # strictly increasing starts
+        DropPlan.from_events(4, [(0, []), (4, [1]), (4, [2])])
+    with pytest.raises(AssertionError):   # at least one agent alive
+        DropPlan.from_events(4, [(0, [0, 1, 2, 3])])
+
+
+def test_drop_plan_epoch_index_concrete_and_traced():
+    plan = DropPlan.from_events(8, [(0, []), (4, [7]), (12, [6, 7])])
+    want = [0] * 4 + [1] * 8 + [2] * 8
+    got_c = [plan.epoch_index(t) for t in range(20)]
+    got_t = [int(jax.jit(plan.epoch_index)(jnp.int32(t))) for t in range(20)]
+    assert got_c == want and got_t == want
+    np.testing.assert_array_equal(plan.alive_at(5),
+                                  [1, 1, 1, 1, 1, 1, 1, 0])
+    np.testing.assert_array_equal(plan.always_alive(), np.arange(6))
+
+
+def test_drop_plan_random_is_deterministic_with_anchors():
+    a = DropPlan.random(16, 0.4, seed=3, n_epochs=5, epoch_len=4)
+    b = DropPlan.random(16, 0.4, seed=3, n_epochs=5, epoch_len=4)
+    assert a == b
+    assert a.starts == (0, 4, 8, 12, 16)
+    # the min_alive anchor agents are never dropped
+    for _, alive in a.epochs:
+        assert alive[0] and alive[1]
+    assert set(a.always_alive()) >= {0, 1}
+    # rate 0 is the all-alive plan
+    z = DropPlan.random(8, 0.0, seed=0)
+    assert all(all(al) for _, al in z.epochs)
+
+
+# ---------------------------------------------------------------------------
+# degrade_round: survivor-rank rewiring invariants
+# ---------------------------------------------------------------------------
+
+def test_degrade_all_alive_is_passthrough():
+    topo = ring(8)
+    assert degrade_round(topo, [True] * 8) is topo
+
+
+def test_degraded_ring8_tail_drop_is_ring6():
+    """Dropping the tail of ring(8) must reproduce ring(6) exactly on the
+    survivor block — the identity behind the exact cross-size resume."""
+    masked = degrade_round(ring(8), [1, 1, 1, 1, 1, 1, 0, 0])
+    assert isinstance(masked, MaskedTopology)
+    W = masked.dense_matrix()
+    np.testing.assert_array_equal(W[:6, :6], ring(6).dense_matrix())
+    eye = np.eye(8)
+    np.testing.assert_array_equal(W[6:], eye[6:])
+    np.testing.assert_array_equal(W[:, 6:], eye[:, 6:])
+    # σ-merged terms: self 0.5, +1 → 1, −1 → 5 (mod 6)
+    assert sorted((t.shift, t.weight) for t in masked.terms) == \
+        [(0, 0.5), (1, 0.25), (5, 0.25)]
+
+
+def test_degraded_round_doubly_stochastic_any_mask():
+    rng = np.random.default_rng(0)
+    for topo in (ring(8), exp_graph(16), hierarchical(2, 8),
+                 hierarchical(4, 4, intra="ring")):
+        n = topo.n_agents
+        for _ in range(4):
+            alive = rng.random(n) > 0.3
+            alive[rng.integers(n)] = True     # ≥ 1 survivor
+            masked = degrade_round(topo, alive)
+            if masked is topo:
+                continue
+            W = masked.dense_matrix()
+            ones = np.ones(n)
+            np.testing.assert_allclose(W @ ones, ones, atol=1e-12)
+            np.testing.assert_allclose(ones @ W, ones, atol=1e-12)
+            assert np.all(W >= 0) and np.all(np.diag(W) > 0)
+            dead = np.flatnonzero(~alive)
+            np.testing.assert_array_equal(W[dead], np.eye(n)[dead])
+
+
+def test_masked_engines_agree_with_dense():
+    """The shifts engine's masked gather route == the dense oracle (the
+    single-process half of the engine-equivalence contract)."""
+    for topo, alive in ((ring(8), [1, 0, 1, 1, 0, 1, 1, 1]),
+                        (exp_graph(16), [1] * 12 + [0] * 4),
+                        (hierarchical(2, 8), [0, 1] * 8)):
+        masked = degrade_round(topo, alive)
+        x = {"a": jax.random.normal(jax.random.PRNGKey(0),
+                                    (topo.n_agents, 5)),
+             "b": jax.random.normal(jax.random.PRNGKey(1),
+                                    (topo.n_agents, 2, 3))}
+        want = mix_dense(masked, x)
+        got = jax.jit(lambda t: mix_shifts(masked, t))(x)
+        for k in x:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(want[k]),
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=f"{masked.name} {k}")
+
+
+# ---------------------------------------------------------------------------
+# ElasticSchedule: per-epoch Assumption-1 transfer
+# ---------------------------------------------------------------------------
+
+def _elastic_cases():
+    out = []
+    for base in (StaticSchedule(ring(8)), StaticSchedule(exp_graph(16)),
+                 StaticSchedule(hierarchical(2, 16)), RoundRobinExp(8),
+                 RoundRobinExp(32)):
+        plan = DropPlan.random(base.n_agents, 0.25, seed=13, n_epochs=4,
+                               epoch_len=base.period)
+        out.append(ElasticSchedule(base, plan))
+    return out
+
+
+@pytest.mark.parametrize("sched", _elastic_cases(),
+                         ids=lambda s: s.name.replace("(", "-").strip(")"))
+def test_elastic_schedules_satisfy_assumption1(sched):
+    """Acceptance: check_assumption1 provably holds for every degraded
+    period — doubly stochastic rounds, positive diagonal, dead rows/cols
+    identity, survivor-block period product contracting."""
+    sched.check_assumption1()
+    stats = sched.product_spectral_stats()
+    assert stats["gap"] > 0
+    for es in sched.epoch_stats():
+        assert es["alive"] >= 2 and es["gap"] > 0, es
+
+
+def test_elastic_round_index_concrete_traced_agree():
+    base = RoundRobinExp(8)                   # period 3
+    plan = DropPlan.from_events(8, [(0, []), (6, [2, 7])])
+    sched = ElasticSchedule(base, plan)
+    assert sched.period == 2 * base.period
+    for t in range(12):
+        r_c = sched.round_index(t)
+        r_t = int(jax.jit(sched.round_index)(jnp.int32(t)))
+        assert r_c == r_t == plan.epoch_index(t) * base.period \
+            + t % base.period
+
+
+def test_elastic_epoch_alignment_asserts():
+    base = RoundRobinExp(8)                   # period 3
+    with pytest.raises(AssertionError):
+        ElasticSchedule(base, DropPlan.from_events(8, [(0, []), (4, [1])]))
+
+
+def test_wire_bytes_drop_under_masking():
+    """Dead agents' rows leave the wire: the masked round ships only the
+    survivor permute rows (the us/step + wire claim of BENCH_elastic)."""
+    base = StaticSchedule(ring(8))
+    plan = DropPlan.from_events(8, [(0, [2, 5])])
+    sched = ElasticSchedule(base, plan)
+    sched.check_assumption1()
+    d = 1024
+    healthy = wire_bytes_per_step(base, 0, elems_per_agent=d,
+                                  engine="ppermute")
+    masked = wire_bytes_per_step(sched, 0, elems_per_agent=d,
+                                 engine="ppermute")
+    # ring ships 2 rows/agent; masked: 2 rows per SURVIVOR (6 of 8)
+    assert healthy == 2 * 8 * d * 4
+    assert masked == 2 * 6 * d * 4
+
+
+def test_make_gossip_schedule_churn_wiring():
+    """--churn reaches the trainer: inline JSON / dict / DropPlan all wrap
+    the base schedule in a checked ElasticSchedule."""
+    from repro.configs.base import RunConfig
+    from repro.train import make_gossip_schedule
+
+    run = RunConfig(global_batch=8, seq_len=8, algorithm="edm")
+    plan = DropPlan.from_events(8, [(0, []), (4, [6, 7])])
+    for churn in (plan, json.dumps(plan.to_json()), plan.to_json()):
+        sched = make_gossip_schedule(run, 8, churn=churn)
+        assert isinstance(sched, ElasticSchedule)
+        assert sched.plan == plan
+    assert not isinstance(make_gossip_schedule(run, 8), ElasticSchedule)
+
+
+# ---------------------------------------------------------------------------
+# StragglerPlan
+# ---------------------------------------------------------------------------
+
+def test_straggler_plan_table():
+    plan = StragglerPlan(n_terms=3, late=((2, (1,)), (4, (0, 2))))
+    np.testing.assert_array_equal(np.asarray(plan.late_at(2)),
+                                  [False, True, False])
+    np.testing.assert_array_equal(np.asarray(plan.late_at(4)),
+                                  [True, False, True])
+    for t in (0, 1, 3, 5, 100):               # past-the-table steps: no late
+        assert not np.any(np.asarray(plan.late_at(t)))
+    assert not np.any(np.asarray(jax.jit(plan.late_at)(jnp.int32(7))))
+    with pytest.raises(AssertionError):
+        StragglerPlan(n_terms=2, late=((0, (2,)),))
+
+
+# ---------------------------------------------------------------------------
+# degraded ppermute == dense == sharded oracle (8-device subprocess)
+# ---------------------------------------------------------------------------
+
+_ELASTIC_ENGINE_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core import (DropPlan, ElasticSchedule, RoundRobinExp,
+                        StaticSchedule, degrade_round, make_overlap_mixer,
+                        make_schedule_mixer, ring)
+from repro.core.mixing import mix_dense, mix_dense_sharded, mix_ppermute
+
+def flat_mesh(n):
+    return Mesh(np.array(jax.devices()[:n]), ("data",))
+
+# {static, round_robin} x {fused, unfused} x {B=1 (A=8), B=4 (A=32)}
+for A, apd in ((8, 1), (32, 4)):
+    for make_base in (lambda A=A: StaticSchedule(ring(A)),
+                      lambda A=A: RoundRobinExp(A)):
+        base = make_base()
+        plan = DropPlan.random(A, 0.25, seed=11, n_epochs=3,
+                               epoch_len=base.period)
+        sched = ElasticSchedule(base, plan)
+        sched.check_assumption1()
+        mesh = flat_mesh(A // apd)
+        tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (A, 5)),
+                "b": jax.random.normal(jax.random.PRNGKey(1), (A, 2, 3))}
+        for fused in (False, True):
+            mix = make_schedule_mixer(sched, "ppermute", mesh=mesh,
+                                      agent_axes="data",
+                                      use_fused_kernel=fused)
+            for r in range(sched.period):
+                got = jax.jit(lambda t, r=r: mix(t, step=r))(tree)
+                want = mix_dense(sched.rounds[r], tree)
+                for k in tree:
+                    np.testing.assert_allclose(
+                        np.asarray(got[k]), np.asarray(want[k]),
+                        rtol=1e-5, atol=1e-6,
+                        err_msg=f"{sched.name} B={apd} fused={fused} "
+                                f"round={r} {k}")
+            # traced step routes through lax.switch into epoch 1
+            t_tr = jnp.int32(base.period)
+            got = jax.jit(mix)(tree, t_tr)
+            want = mix_dense(sched.round(base.period), tree)
+            for k in tree:
+                np.testing.assert_allclose(
+                    np.asarray(got[k]), np.asarray(want[k]),
+                    rtol=1e-5, atol=1e-6,
+                    err_msg=f"{sched.name} B={apd} fused={fused} traced")
+    print(f"ELASTIC_AGREE A={A} B={apd}")
+
+# HLO pin: exactly one collective-permute per nonzero survivor shift (B=1)
+A = 8
+sched = ElasticSchedule(StaticSchedule(ring(A)),
+                        DropPlan.from_events(A, [(0, (2, 5))]))
+masked = sched.rounds[0]
+nz = sum(1 for t in masked.terms if t.shift != 0)
+assert nz == 2, [t.shift for t in masked.terms]
+mix = make_schedule_mixer(sched, "ppermute", mesh=flat_mesh(A),
+                          agent_axes="data")
+x = {"w": jax.random.normal(jax.random.PRNGKey(0), (A, 4))}
+hlo = jax.jit(lambda t: mix(t, step=0)).lower(x).compile().as_text()
+got = hlo.count("collective-permute(")
+assert got == nz, (got, nz)
+print("ELASTIC_HLO_OK")
+
+# sharded oracle: masked ppermute on a pods x shards mesh == shard-resident
+# dense oracle == dense oracle (4 pod-agents x 2 FSDP shards)
+from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
+A, S = 4, 2
+mesh = make_gossip_mesh(A, pods=A, shards=S)
+axes = gossip_agent_axes(mesh, sharded=True)
+masked = degrade_round(ring(A), [1, 1, 1, 0])
+x = jax.random.normal(jax.random.PRNGKey(2), (A, 8, 16))
+want = mix_dense(masked, x)
+got_pp = mix_ppermute(masked, mesh, axes, x, shard_axes="data")
+got_ds = mix_dense_sharded(masked, mesh, axes, "data", x)
+np.testing.assert_allclose(np.asarray(got_pp), np.asarray(want),
+                           rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(np.asarray(got_ds), np.asarray(want),
+                           rtol=1e-5, atol=1e-6)
+print("ELASTIC_SHARDED_OK")
+
+# straggler: a late payload slot degrades to self-weight — equals the
+# W_eff oracle, never reads the late buffer (NaN-poisoned), and the
+# dense-engine late path agrees with the ppermute one
+from jax.sharding import NamedSharding, PartitionSpec as P
+A = 8
+sched = StaticSchedule(ring(A))
+mesh = flat_mesh(A)
+issue, complete = make_overlap_mixer(sched, "ppermute", mesh=mesh,
+                                     agent_axes="data")
+x = jax.device_put(jax.random.normal(jax.random.PRNGKey(3), (A, 64, 128)),
+                   NamedSharding(mesh, P("data")))
+pays = issue(x, 0)
+late_np = np.zeros(complete.n_terms, bool)
+k_late = next(k for k, t in enumerate(sched.rounds[0].terms)
+              if t.shift != 0)
+late_np[k_late] = True
+poisoned = pays.at[k_late].set(jnp.nan)
+got = jax.jit(lambda p: complete(p, 0, late=jnp.asarray(late_np)))(poisoned)
+assert bool(jnp.all(jnp.isfinite(got))), "late buffer leaked into combine"
+n = A
+idx = np.arange(n)
+W_eff = np.zeros((n, n), np.float32)
+for k, t in enumerate(sched.rounds[0].terms):
+    if late_np[k]:
+        W_eff[idx, idx] += t.weight
+    else:
+        W_eff[idx, sched.rounds[0].term_sources(t)] += t.weight
+np.testing.assert_allclose(W_eff.sum(0), 1.0, atol=1e-6)
+np.testing.assert_allclose(W_eff.sum(1), 1.0, atol=1e-6)
+want = jnp.einsum("ij,j...->i...", jnp.asarray(W_eff), x)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           rtol=1e-5, atol=1e-6)
+_, complete_d = make_overlap_mixer(sched, "dense")
+got_d = complete_d(jax.device_get(x), 0, late=jnp.asarray(late_np))
+np.testing.assert_allclose(np.asarray(got_d), np.asarray(want),
+                           rtol=1e-5, atol=1e-6)
+
+# masked overlap: issue/complete over an ElasticSchedule (per-agent weight
+# columns) == the synchronous masked schedule mixer, every round
+es = ElasticSchedule(StaticSchedule(ring(A)),
+                     DropPlan.from_events(A, [(0, ()), (1, (2, 5))]))
+mix_s = make_schedule_mixer(es, "ppermute", mesh=mesh, agent_axes="data")
+issue_e, complete_e = make_overlap_mixer(es, "ppermute", mesh=mesh,
+                                         agent_axes="data")
+for s in range(es.period):
+    got = jax.jit(lambda t, s=s: complete_e(issue_e(t, s), s))(x)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(mix_s(x, step=s)),
+                               rtol=1e-5, atol=1e-6, err_msg=f"step {s}")
+print("ELASTIC_STRAGGLER_OK")
+"""
+
+
+def test_elastic_engines_subprocess():
+    """Acceptance: degraded ppermute == dense == sharded oracle over
+    {static, round_robin} × {fused, unfused} × {B=1, B=4}; one
+    collective-permute per nonzero survivor shift; straggler complete()
+    matches the W_eff oracle without reading the late buffer."""
+    r = subprocess.run([sys.executable, "-c", _ELASTIC_ENGINE_CODE],
+                       cwd=REPO, env=ENV, capture_output=True, text=True,
+                       timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    for marker in ("ELASTIC_AGREE A=8 B=1", "ELASTIC_AGREE A=32 B=4",
+                   "ELASTIC_HLO_OK", "ELASTIC_SHARDED_OK",
+                   "ELASTIC_STRAGGLER_OK"):
+        assert marker in r.stdout, (marker, r.stdout[-2000:])
+
+
+# ---------------------------------------------------------------------------
+# cross-size checkpoints (DESIGN §8 join/leave)
+# ---------------------------------------------------------------------------
+
+def test_resize_state_shrink_and_grow_policies():
+    k = jax.random.PRNGKey(0)
+    state = {
+        "params": {"w": jax.random.normal(k, (6, 3))},
+        "opt": {"psi": {"w": jax.random.normal(jax.random.fold_in(k, 1),
+                                               (6, 3))},
+                "m": {"w": jax.random.normal(jax.random.fold_in(k, 2),
+                                             (6, 3))}},
+        "step": jnp.int32(5),
+    }
+    from repro.train import checkpoint
+
+    # shrink: selected rows verbatim, bit-exact
+    small = checkpoint.resize_state(state, [0, 2, 4], 3)
+    for slot in ("params",):
+        np.testing.assert_array_equal(
+            np.asarray(small[slot]["w"]),
+            np.asarray(state[slot]["w"])[[0, 2, 4]])
+    np.testing.assert_array_equal(np.asarray(small["opt"]["m"]["w"]),
+                                  np.asarray(state["opt"]["m"]["w"])[[0, 2, 4]])
+
+    # grow: joiners at the consensus mean, ψ := x, m = 0
+    big = checkpoint.resize_state(state, range(6), 8)
+    w = np.asarray(state["params"]["w"])
+    np.testing.assert_array_equal(np.asarray(big["params"]["w"])[:6], w)
+    np.testing.assert_allclose(np.asarray(big["params"]["w"])[6:],
+                               np.broadcast_to(w.mean(0), (2, 3)),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(big["opt"]["psi"]["w"])[6:],
+                                  np.asarray(big["params"]["w"])[6:])
+    np.testing.assert_array_equal(np.asarray(big["opt"]["psi"]["w"])[:6],
+                                  np.asarray(state["opt"]["psi"]["w"]))
+    np.testing.assert_array_equal(np.asarray(big["opt"]["m"]["w"])[6:], 0.0)
+    assert int(big["step"]) == 5
+
+
+def _tiny_model():
+    from repro.configs.base import ModelConfig
+    from repro.models import build_model
+    cfg = ModelConfig(name="el-tiny", family="dense", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32")
+    return build_model(cfg)
+
+
+def _elastic_run(n_agents, **kw):
+    from repro.configs.base import RunConfig
+    return RunConfig(global_batch=n_agents, seq_len=8, algorithm="edm",
+                     alpha=0.1, gossip_engine="shifts", packed_bus=True,
+                     remat=False, **kw)
+
+
+def test_checkpoint_same_size_resized_roundtrip_bitwise(tmp_path):
+    """A′ == A with default survivors short-circuits to load_state — the
+    resized loader round-trips bit-identically."""
+    from repro.data import SyntheticLM
+    from repro.train import (build_train_step, bus_layout_for, checkpoint,
+                             init_state, make_gossip_schedule)
+
+    model = _tiny_model()
+    A = 8
+    run = _elastic_run(A)
+    layout = bus_layout_for(model, A)
+    batch = SyntheticLM(vocab_size=64, seq_len=8, n_agents=A).sample(
+        jax.random.PRNGKey(1), 1)
+    sched = make_gossip_schedule(run, A)
+    step = jax.jit(build_train_step(model, run, sched))
+    state = init_state(model, run, A, jax.random.PRNGKey(0))
+    for _ in range(3):
+        state, _ = step(state, batch)
+    path = str(tmp_path / "same.npz")
+    checkpoint.save_state(path, state, layout=layout)
+    like = init_state(model, run, A, jax.random.PRNGKey(0))
+    restored = checkpoint.load_state_resized(path, like, layout=layout)
+    np.testing.assert_array_equal(np.asarray(restored["params"]),
+                                  np.asarray(state["params"]))
+    for slot in state["opt"]:
+        np.testing.assert_array_equal(np.asarray(restored["opt"][slot]),
+                                      np.asarray(state["opt"][slot]))
+    assert int(restored["step"]) == 3
+
+
+def test_resumed_churn_trajectory_matches_uninterrupted(tmp_path):
+    """The headline §8 exactness contract: an A=8 run whose plan drops the
+    tail agents at step 4, vs the same run checkpointed at step 4 and
+    resumed at A′=6 — the survivors' trajectories agree EXACTLY, because
+    the degraded ring(8) restricted to its 6 survivors IS ring(6) and the
+    shrink resize is bit-exact."""
+    from repro.data import SyntheticLM
+    from repro.train import (build_train_step, bus_layout_for, checkpoint,
+                             init_state, make_gossip_schedule)
+
+    model = _tiny_model()
+    A = 8
+    churn = DropPlan.from_events(A, [(0, []), (4, [6, 7])])
+    run8 = _elastic_run(A)
+    layout = bus_layout_for(model, A)   # agent-count-agnostic
+    data = SyntheticLM(vocab_size=64, seq_len=8, n_agents=A)
+    batches = [data.sample(jax.random.PRNGKey(100 + t), 1) for t in range(8)]
+
+    # uninterrupted churn run: 8 agents, tail degraded from step 4
+    sched8 = make_gossip_schedule(run8, A, churn=churn)
+    step8 = jax.jit(build_train_step(model, run8, sched8))
+    s_full = init_state(model, run8, A, jax.random.PRNGKey(0))
+    path = str(tmp_path / "elastic.npz")
+    for t in range(8):
+        if t == 4:
+            checkpoint.save_state(path, s_full, layout=layout)
+        s_full, _ = step8(s_full, batches[t])
+
+    # resumed run: load the step-4 checkpoint into a 6-agent build
+    run6 = _elastic_run(6)
+    sched6 = make_gossip_schedule(run6, 6)
+    step6 = jax.jit(build_train_step(model, run6, sched6))
+    like6 = init_state(model, run6, 6, jax.random.PRNGKey(0))
+    s_res = checkpoint.load_state_resized(path, like6, layout=layout)
+    assert int(s_res["step"]) == 4
+    for t in range(4, 8):
+        b6 = jax.tree.map(lambda l: l[:6], batches[t])
+        s_res, _ = step6(s_res, b6)
+
+    np.testing.assert_array_equal(np.asarray(s_res["params"]),
+                                  np.asarray(s_full["params"])[:6])
+    for slot in s_res["opt"]:
+        np.testing.assert_array_equal(
+            np.asarray(s_res["opt"][slot]),
+            np.asarray(s_full["opt"][slot])[:6], err_msg=slot)
+
+
+def test_rejoin_after_shrink_seeds_consensus(tmp_path):
+    """Grow leg of join/leave: a 6-agent checkpoint resumed at A′=8 puts
+    joiners at the survivors' consensus mean with ψ := x and m = 0, and the
+    grown state trains without NaNs."""
+    from repro.data import SyntheticLM
+    from repro.train import (build_train_step, bus_layout_for, checkpoint,
+                             init_state, make_gossip_schedule)
+
+    model = _tiny_model()
+    run6 = _elastic_run(6)
+    layout = bus_layout_for(model, 6)
+    data = SyntheticLM(vocab_size=64, seq_len=8, n_agents=8)
+    batch8 = data.sample(jax.random.PRNGKey(1), 1)
+    batch6 = jax.tree.map(lambda l: l[:6], batch8)
+    sched6 = make_gossip_schedule(run6, 6)
+    step6 = jax.jit(build_train_step(model, run6, sched6))
+    s6 = init_state(model, run6, 6, jax.random.PRNGKey(0))
+    for _ in range(3):
+        s6, _ = step6(s6, batch6)
+    path = str(tmp_path / "shrunk.npz")
+    checkpoint.save_state(path, s6, layout=layout)
+
+    run8 = _elastic_run(8)
+    like8 = init_state(model, run8, 8, jax.random.PRNGKey(0))
+    s8 = checkpoint.load_state_resized(path, like8, layout=layout)
+    p8 = np.asarray(s8["params"])
+    np.testing.assert_array_equal(p8[:6], np.asarray(s6["params"]))
+    np.testing.assert_allclose(p8[6:],
+                               np.broadcast_to(p8[:6].mean(0), p8[6:].shape),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(s8["opt"]["psi"])[6:], p8[6:])
+    np.testing.assert_array_equal(np.asarray(s8["opt"]["m"])[6:], 0.0)
+    sched8 = make_gossip_schedule(run8, 8)
+    step8 = jax.jit(build_train_step(model, run8, sched8))
+    for _ in range(2):
+        s8, m = step8(s8, batch8)
+        assert np.isfinite(float(m["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# churn divergence gates (satellite e — the raising gate behind --churn)
+# ---------------------------------------------------------------------------
+
+def test_churn_divergence_gates():
+    code = (
+        "from benchmarks.gossip_micro import churn_divergence_gates\n"
+        "gates = churn_divergence_gates(verbose=False)\n"
+        "assert gates['quadratic']['ratio'] <= 3.0\n"
+        "assert gates['logistic']['ratio'] <= 1.10\n"
+        "assert gates['quadratic']['always_alive'] >= 2\n"
+        "print('CHURN_GATES_OK')\n"
+    )
+    r = subprocess.run([sys.executable, "-c", code], cwd=REPO, env=ENV,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "CHURN_GATES_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# property sweeps (slow tail): deterministic + hypothesis
+# ---------------------------------------------------------------------------
+
+def _property_topologies():
+    out = []
+    for n in (4, 8, 16, 32):
+        out.append(("ring", ring(n)))
+        out.append(("exp", exp_graph(n)))
+    for p, d in ((2, 2), (2, 8), (4, 4), (4, 8)):
+        out.append(("hier", hierarchical(p, d)))
+    return out
+
+
+def _check_degrade_invariants(topo, alive):
+    """The per-round invariant set behind both property sweeps."""
+    n = topo.n_agents
+    masked = degrade_round(topo, alive)
+    if masked is topo:
+        assert all(alive)
+        return
+    W = masked.dense_matrix()
+    ones = np.ones(n)
+    np.testing.assert_allclose(W @ ones, ones, atol=1e-12)
+    np.testing.assert_allclose(ones @ W, ones, atol=1e-12)
+    assert np.all(W >= 0) and np.all(np.diag(W) > 0)
+    dead = np.flatnonzero(~np.asarray(alive, bool))
+    np.testing.assert_array_equal(W[dead], np.eye(n)[dead])
+    np.testing.assert_array_equal(W[:, dead], np.eye(n)[:, dead])
+    # survivor block of the ±1-connected round contracts when m >= 2
+    mask = LivenessMask.of(alive)
+    if mask.m >= 2 and any(t.shift != 0 for t in masked.terms):
+        from repro.core import matrix_lam
+        sub = W[np.ix_(mask.survivors, mask.survivors)]
+        assert matrix_lam(np.linalg.matrix_power(sub, mask.m)) < 1 - 1e-9
+
+
+@pytest.mark.slow
+def test_degrade_invariants_seeded_sweep():
+    """Deterministic property sweep over {ring, exp, hierarchical} ×
+    n ∈ {4..32} × random masks — runs without hypothesis installed."""
+    rng = np.random.default_rng(42)
+    for _, topo in _property_topologies():
+        n = topo.n_agents
+        for _ in range(6):
+            alive = rng.random(n) > rng.uniform(0.1, 0.6)
+            alive[int(rng.integers(n))] = True
+            _check_degrade_invariants(topo, alive)
+
+
+@pytest.mark.slow
+def test_degrade_invariants_hypothesis():
+    """Hypothesis sweep of the same invariants (optional `test` extra)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    topos = _property_topologies()
+
+    @settings(max_examples=40, deadline=None)
+    @given(i=st.integers(0, len(topos) - 1), data=st.data())
+    def run(i, data):
+        _, topo = topos[i]
+        n = topo.n_agents
+        alive = list(data.draw(
+            st.lists(st.booleans(), min_size=n, max_size=n)))
+        alive[data.draw(st.integers(0, n - 1))] = True
+        _check_degrade_invariants(topo, alive)
+
+    run()

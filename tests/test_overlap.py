@@ -231,6 +231,93 @@ def test_delayed_step0_and_envelope():
 
 
 # ---------------------------------------------------------------------------
+# straggler degradation (DESIGN §8): late slots fall back to self-weight
+# ---------------------------------------------------------------------------
+
+def test_straggler_matches_self_weight_oracle():
+    """A forced-late gossip term degrades the delayed step to the
+    self-weight matrix W_eff = Σ_{k∉late} w_k P_k + (Σ_{k∈late} w_k) I:
+    the trainer trajectory equals a hand-rolled delayed-EDM reference with
+    the per-step W_eff, never NaNs, and steps without late slots (incl.
+    step 0) match the plain delayed run exactly."""
+    from repro.core import StragglerPlan
+    from repro.train import make_topology
+
+    model = _model()
+    batch = _batch(model)
+    run = _run(overlap="delayed")
+    alpha, beta = run.alpha, run.beta
+    topo = make_topology(run, A)               # ring(4): K = 3 terms
+    K = len(topo.terms)
+    late_by_step = {2: (1,), 3: (1, 2)}
+    plan = StragglerPlan(n_terms=K, late=tuple(
+        (s, ks) for s, ks in late_by_step.items()))
+
+    sched = make_gossip_schedule(run, A)
+    state = init_state(model, run, A, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model, run, sched, straggler_plan=plan))
+    traj = []
+    for _ in range(6):
+        state, m = step(state, batch)
+        assert np.isfinite(float(m["loss"])), "straggler step NaNed"
+        traj.append(float(m["loss"]))
+
+    # reference: the delayed recursion of test_delayed_matches_reference
+    # with an explicit per-step W_eff oracle
+    n = A
+    idx = np.arange(n)
+
+    def W_eff(late_ks):
+        W = np.zeros((n, n), np.float32)
+        for k, t in enumerate(topo.terms):
+            src = idx if k in late_ks else topo.term_sources(t)
+            W[idx, src] += t.weight
+        np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-6)
+        return jnp.asarray(W)
+
+    grad_fn = jax.vmap(jax.value_and_grad(
+        lambda p, b: model.loss(p, b, remat=False, remat_policy="full")))
+    params1 = model.init(jax.random.PRNGKey(0))
+    phi = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (A,) + l.shape), params1)
+    m_st = jax.tree.map(jnp.zeros_like, phi)
+    psi = phi
+    ref_losses = []
+    for t in range(6):
+        W = W_eff(late_by_step.get(t, ()))
+        x = jax.tree.map(lambda l: jnp.einsum("ij,j...->i...", W, l), phi)
+        losses, g = grad_fn(phi, batch)
+        ref_losses.append(float(jnp.mean(losses)))
+        m_st = jax.tree.map(lambda m_, g_: beta * m_ + (1 - beta) * g_,
+                            m_st, g)
+        psi_new = jax.tree.map(lambda xx, mm: xx - alpha * mm, x, m_st)
+        phi = jax.tree.map(lambda pn, xx, ps: pn + xx - ps, psi_new, x, psi)
+        psi = psi_new
+    np.testing.assert_allclose(traj, ref_losses, rtol=1e-5, atol=1e-6)
+
+    # late-free prefix == the plain delayed run (step 0 synchronous)
+    _, t_plain = _steps(model, batch, run, 2)
+    for t in range(2):
+        np.testing.assert_allclose(traj[t], float(t_plain[t]["loss"]),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_straggler_plan_arity_and_mode_guards():
+    """straggler_plan needs overlap='delayed' and the mixer's stack arity."""
+    from repro.core import StragglerPlan
+
+    model = _model()
+    plan = StragglerPlan(n_terms=3)
+    with pytest.raises(AssertionError):
+        build_train_step(model, _run(), make_gossip_schedule(_run(), A),
+                         straggler_plan=plan)
+    run = _run(overlap="delayed")
+    with pytest.raises(AssertionError):
+        build_train_step(model, run, make_gossip_schedule(run, A),
+                         straggler_plan=StragglerPlan(n_terms=5))
+
+
+# ---------------------------------------------------------------------------
 # checkpoint: pipeline state (parity + live slot) round-trips (satellite)
 # ---------------------------------------------------------------------------
 
