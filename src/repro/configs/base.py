@@ -183,6 +183,13 @@ class RunConfig:
     # compute.  Requires the packed bus (the payload is ONE buffer).
     overlap: str = "off"             # off | delayed
     gossip_dtype: str = "float32"    # bf16 payload is a §Perf lever
+    # quantized gossip wire (DESIGN §9): wire format of the bus permutes.
+    # "bf16" / "int8" route the packed-bus step through the error-feedback
+    # codec (bus-shaped residual in the opt state, decode folded into the
+    # combine); "f32" is the byte-identical legacy wire.  Packed bus only;
+    # mutually exclusive with gossip_dtype != float32 (the codec replaces
+    # that cast lever and, unlike it, composes with overlap="delayed").
+    wire: str = "f32"                # f32 | bf16 | int8
     gossip_every: int = 1            # gossip every k steps (local-EDM, §Perf)
     moe_sharding: bool = False       # explicit MoE dispatch constraints (§Perf)
     moe_impl: str = "gspmd"          # gspmd | shard_map  (§Perf serving path)

@@ -16,7 +16,10 @@ from .elastic import (  # noqa: F401
     StragglerPlan,
 )
 from .optimizers import (  # noqa: F401
-    DecOptimizer, make_optimizer, make_edm_bus, ALGORITHMS,
+    DecOptimizer, make_optimizer, make_edm_bus, make_edm_bus_ef, ALGORITHMS,
+)
+from .wire import (  # noqa: F401
+    WIRE_FORMATS, WireCodec, make_codec, encode_ef,
 )
 from .bus import (  # noqa: F401
     BusLayout, LeafSlot, make_layout, layout_of, pack_tree, unpack_tree,

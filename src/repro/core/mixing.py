@@ -254,7 +254,8 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
                  use_fused_kernel: bool = False,
                  interpret: bool | None = None,
                  transport: str = "auto",
-                 shard_axes: str | None = None) -> Any:
+                 shard_axes: str | None = None,
+                 wire=None) -> Any:
     """Production gossip engine: ``shard_map`` + ``jax.lax.ppermute``.
 
     The agent axis is *consumed* by the mesh (a block of A/M agents per mesh
@@ -293,6 +294,20 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
     every permute and the combine operate on the shard's own row block
     (shard-local gossip; the ring_dma transport does not compose with row
     sharding and is excluded).
+
+    ``wire`` (a :class:`repro.core.wire.WireCodec`, DESIGN §9) switches the
+    engine to wire-coded payloads: ``tree`` is then the codec's *encoded*
+    payload of a single ``(A, rows, 128)`` bus — a bf16 bus, or an
+    ``(int8 bus, per-block scales)`` pair — whose components permute
+    leaf-wise through the SAME per-term wire plan (scales travel with their
+    blocks), and the decode is folded into the combine
+    (:func:`repro.kernels.ops.gossip_axpy_wire` when fused, an f32
+    decode-then-accumulate chain otherwise).  The result is the decoded f32
+    mixed bus; since permutes commute with the elementwise decode, it
+    equals the f32 engine applied to ``wire.quantize(bus)`` exactly.  The
+    ring_dma transport ships raw f32 blocks and is excluded; a masked
+    blocked round (B > 1) falls back to decode-then-gather (correct, but
+    the gathered hop is f32 — see the §6 fallback matrix).
     """
     import os
 
@@ -302,6 +317,10 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
     axis_flat = names if len(names) > 1 else names[0]
     A = topo.n_agents
     permute_term = _make_permute_term(topo, names, sizes, split, B)
+    if wire is not None and wire.fmt == "f32":
+        wire = None     # f32 wire IS the legacy path — byte-identical
+    if wire is not None:
+        tree = tuple(wire.payload_leaves(tree))
     if shard_axes is not None:
         assert shard_axes not in names, (shard_axes, names)
         assert B == 1, "shard-resident gossip needs one agent per mesh slice"
@@ -314,7 +333,7 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
     ring_plan = None
     if transport != "ppermute":
         from repro.kernels import ring_dma
-        eligible = (shard_axes is None and not masked
+        eligible = (shard_axes is None and not masked and wire is None
                     and ring_dma.ring_dma_supported(topo, n_axes=len(names),
                                                     B=B)
                     and all(getattr(l, "ndim", 0) == 3 and l.shape[-1] == 128
@@ -379,8 +398,43 @@ def mix_ppermute(topo: Topology, mesh, agent_axes, tree: Any, *,
                              weights)
                      for x in leaves)
 
-    flat, treedef = jax.tree_util.tree_flatten(tree)
+    def combine_wire(pays, ws):
+        # decode folded into the combine: payloads widen to f32 exactly
+        # once, already weighted/dequantized (DESIGN §9).
+        if use_fused_kernel:
+            from repro.kernels.ops import gossip_axpy_wire
+            return gossip_axpy_wire(pays, ws, fmt=wire.fmt,
+                                    block_rows=wire.block_rows,
+                                    interpret=interpret)
+        acc = None
+        for w, p in zip(ws, pays):
+            term = w * wire.decode(p)
+            acc = term if acc is None else acc + term
+        return acc
+
+    def body_wire(*leaves):
+        payload = wire.payload_from_leaves(leaves)
+        if masked and B > 1:
+            # blocked masked fallback: gather needs per-agent indexing, so
+            # decode shard-locally first (that hop ships f32; §6 matrix).
+            return (masked_gather_mix(wire.decode(payload)),)
+        if masked:
+            i = _flat_device_index(names, sizes)
+            wcols = jnp.asarray(wcols_np)
+            ws = [wcols[k, i] for k in range(len(topo.terms))]
+        else:
+            ws = weights
+        pays = [wire.map_payload(lambda l: permute_term(l, t), payload)
+                for t in topo.terms]
+        return (combine_wire(pays, ws),)
+
     spec = P(axis_flat) if shard_axes is None else P(axis_flat, shard_axes)
+    if wire is not None:
+        specs = tuple(spec for _ in tree)
+        (out,) = shard_map(body_wire, mesh, specs, (spec,))(*tree)
+        return out
+
+    flat, treedef = jax.tree_util.tree_flatten(tree)
     specs = tuple(spec for _ in flat)
     out = shard_map(body, mesh, specs, specs)(*flat)
     return jax.tree_util.tree_unflatten(treedef, list(out))
@@ -422,7 +476,8 @@ def mix_dense_sharded(topo: Topology, mesh, agent_axes, shard_axes,
 
 def make_mixer(topo: Topology, engine: str = "shifts", mesh=None,
                agent_axes=None, use_fused_kernel: bool = False,
-               transport: str = "auto", shard_axes: str | None = None):
+               transport: str = "auto", shard_axes: str | None = None,
+               wire=None):
     """Return ``mix(tree) -> tree``.  engine ∈ {"dense", "shifts", "ppermute"}.
 
     ``mesh``/``agent_axes`` are required for (and only used by) the ppermute
@@ -430,23 +485,38 @@ def make_mixer(topo: Topology, engine: str = "shifts", mesh=None,
     ``gossip_axpy`` kernel, ``transport`` selects its wire mechanism and
     ``shard_axes`` enables shard-resident gossip over FSDP row shards
     (see :func:`mix_ppermute`).
+
+    With ``wire`` (a :class:`repro.core.wire.WireCodec`) the mixer takes the
+    codec's *encoded* payload and returns the decoded f32 mix.  Only the
+    ppermute engine actually ships wire bytes; dense/shifts decode first and
+    mix in f32 — the single-device reference of the identical semantics
+    (the engines still agree exactly, payload-in, f32-out).
     """
+    if wire is not None and wire.fmt == "f32":
+        wire = None
     if engine == "dense":
-        return functools.partial(mix_dense, topo)
+        base = functools.partial(mix_dense, topo)
+        if wire is None:
+            return base
+        return lambda payload: base(wire.decode(payload))
     if engine == "shifts":
-        return functools.partial(mix_shifts, topo)
+        base = functools.partial(mix_shifts, topo)
+        if wire is None:
+            return base
+        return lambda payload: base(wire.decode(payload))
     if engine == "ppermute":
         assert mesh is not None and agent_axes is not None, \
             "ppermute engine needs mesh= and agent_axes="
         return functools.partial(mix_ppermute, topo, mesh, agent_axes,
                                  use_fused_kernel=use_fused_kernel,
-                                 transport=transport, shard_axes=shard_axes)
+                                 transport=transport, shard_axes=shard_axes,
+                                 wire=wire)
     raise ValueError(f"unknown mixing engine: {engine}")
 
 
 def make_schedule_mixer(sched, engine: str = "shifts", mesh=None,
                         agent_axes=None, use_fused_kernel: bool = False,
-                        shard_axes: str | None = None):
+                        shard_axes: str | None = None, wire=None):
     """Step-indexed mixer over a :class:`~repro.core.schedule.GossipSchedule`:
     returns ``mix(tree, step=0) -> tree`` applying the schedule's round
     ``step % period`` through the chosen engine.
@@ -465,7 +535,7 @@ def make_schedule_mixer(sched, engine: str = "shifts", mesh=None,
     """
     mixers = [make_mixer(r, engine, mesh=mesh, agent_axes=agent_axes,
                          use_fused_kernel=use_fused_kernel,
-                         shard_axes=shard_axes)
+                         shard_axes=shard_axes, wire=wire)
               for r in sched.rounds]
     if len(mixers) == 1:
         return lambda tree, step=0: mixers[0](tree)
@@ -482,7 +552,7 @@ def make_schedule_mixer(sched, engine: str = "shifts", mesh=None,
 def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
                        agent_axes=None, use_fused_kernel: bool = False,
                        interpret: bool | None = None,
-                       shard_axes: str | None = None):
+                       shard_axes: str | None = None, wire=None):
     """Phase-split schedule mixer for the overlapped gossip pipeline
     (DESIGN §6): returns ``(issue, complete)`` such that
     ``complete(issue(x, step), step)`` equals the synchronous
@@ -521,7 +591,18 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
     oracle (the straggler tests' reference); shifts has no payload stack
     and rejects it.  ``complete.n_terms`` exposes the stack arity K for
     :class:`~repro.core.elastic.StragglerPlan` validation.
+
+    With ``wire`` (a :class:`repro.core.wire.WireCodec`, DESIGN §9) the
+    pipeline composes with the compressed wire: ``issue`` takes the codec's
+    *encoded* payload (quantized at issue time, behind the backward pass —
+    the residual was split off by the EF encode before the call) and stacks
+    each payload component per term; ``complete`` folds the decode into the
+    combine and returns the f32 mixed bus.  Late-slot substitution operates
+    on the encoded stacks component-wise, so a straggler degrades onto its
+    own *quantized* self payload — exactly what it put on the wire.
     """
+    if wire is not None and wire.fmt == "f32":
+        wire = None
     R = len(sched.rounds)
     K = max(len(r.terms) for r in sched.rounds)
 
@@ -536,7 +617,7 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
         mix = make_schedule_mixer(sched, engine, mesh=mesh,
                                   agent_axes=agent_axes,
                                   use_fused_kernel=use_fused_kernel,
-                                  shard_axes=shard_axes)
+                                  shard_axes=shard_axes, wire=wire)
         if engine == "dense":
             # per-term dense stacks: Wk = diag(wcol_k) P_k, Ik = diag(wcol_k)
             n = sched.n_agents
@@ -556,6 +637,8 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
                 return mix(x, step)
             assert engine == "dense", \
                 "straggler degradation needs the ppermute or dense engine"
+            if wire is not None:
+                x = wire.decode(x)
             r = sched.round_index(step)
             lateb = jnp.asarray(late).reshape(K, 1, 1)
             W_eff = jnp.sum(jnp.where(lateb, Ik_t[r], Wk_t[r]), axis=0)
@@ -604,7 +687,7 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
                 "shard-resident gossip needs one agent per mesh slice"
         permute_term = _make_permute_term(topo, names, sizes, split, B)
 
-        def body(x):
+        def stack_terms(x):
             pays = [permute_term(x, t) for t in topo.terms]
             pays += [x] * (K - len(pays))   # weight-0 pad to the max arity
             return jnp.stack(pays)
@@ -613,7 +696,18 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
                    else P(axis_flat, shard_axes))
         out_spec = (P(None, axis_flat) if shard_axes is None
                     else P(None, axis_flat, shard_axes))
-        return shard_map(body, mesh, (in_spec,), out_spec)
+        if wire is None:
+            return shard_map(stack_terms, mesh, (in_spec,), out_spec)
+
+        # wire-coded issue: stack every payload component per term — the
+        # permutes run on the wire dtype, scales ride with their blocks.
+        def body_wire(*leaves):
+            return tuple(stack_terms(l) for l in leaves)
+
+        nl = 2 if wire.fmt == "int8" else 1
+        sm = shard_map(body_wire, mesh, (in_spec,) * nl, (out_spec,) * nl)
+        return lambda payload: wire.payload_from_leaves(
+            sm(*wire.payload_leaves(payload)))
 
     issues = [make_issue(r) for r in sched.rounds]
 
@@ -639,24 +733,53 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
             acc = acc + ws[k] * ops[k]
         return acc
 
+    def combine_body_wire(w, *pleaves):
+        # pleaves: per-component (K, B_shard, ...) stacks; regroup per term
+        # and fold the decode into the weighted combine (DESIGN §9).
+        ws = [w[k] if w.ndim == 1 else w[k, 0] for k in range(K)]
+        ops = [wire.payload_from_leaves([leaf[k] for leaf in pleaves])
+               for k in range(K)]
+        if use_fused_kernel:
+            from repro.kernels.ops import gossip_axpy_wire
+            return gossip_axpy_wire(ops, ws, fmt=wire.fmt,
+                                    block_rows=wire.block_rows,
+                                    interpret=interpret)
+        acc = None
+        for wk, op in zip(ws, ops):
+            term = wk * wire.decode(op)
+            acc = term if acc is None else acc + term
+        return acc
+
     pay_spec = (P(None, axis0) if shard_axes is None
                 else P(None, axis0, shard_axes))
     out0 = P(axis0) if shard_axes is None else P(axis0, shard_axes)
-    combine = shard_map(combine_body, mesh, (w_spec, pay_spec), out0)
+    if wire is None:
+        combine = shard_map(combine_body, mesh, (w_spec, pay_spec), out0)
+    else:
+        nl = 2 if wire.fmt == "int8" else 1
+        combine_sm = shard_map(combine_body_wire, mesh,
+                               (w_spec,) + (pay_spec,) * nl, out0)
+
+        def combine(w, payloads):
+            return combine_sm(w, *wire.payload_leaves(payloads))
 
     def complete(payloads, step=0, late=None):
         r = sched.round_index(step)
         if late is not None:
             # substitute late slots with the round's self payload BEFORE
             # the combine — original weights then realize the self-weight
-            # absorption W_eff without ever reading the late buffer.
-            if isinstance(r, (int, np.integer)):
-                selfpay = payloads[int(self_np[r])]
-            else:
-                selfpay = jnp.take(payloads, self_t[r], axis=0)
-            lateb = jnp.asarray(late).reshape(
-                (K,) + (1,) * (payloads.ndim - 1))
-            payloads = jnp.where(lateb, selfpay[None], payloads)
+            # absorption W_eff without ever reading the late buffer.  With
+            # a wire codec this runs component-wise on the encoded stacks.
+            def sub(pay):
+                if isinstance(r, (int, np.integer)):
+                    selfpay = pay[int(self_np[r])]
+                else:
+                    selfpay = jnp.take(pay, self_t[r], axis=0)
+                lateb = jnp.asarray(late).reshape(
+                    (K,) + (1,) * (pay.ndim - 1))
+                return jnp.where(lateb, selfpay[None], pay)
+
+            payloads = jax.tree.map(sub, payloads)
         return combine(w_table[r], payloads)
 
     complete.n_terms = K

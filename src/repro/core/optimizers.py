@@ -37,7 +37,8 @@ Grads = Any
 State = Dict[str, Any]
 Mixer = Callable[[Any], Any]
 
-__all__ = ["DecOptimizer", "make_optimizer", "make_edm_bus", "ALGORITHMS"]
+__all__ = ["DecOptimizer", "make_optimizer", "make_edm_bus",
+           "make_edm_bus_ef", "ALGORITHMS"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +160,68 @@ def make_edm_bus(alpha: float, beta: float, mix: Mixer, *,
         return mix(phi), {"m": m_new, "psi": psi_new}
 
     return DecOptimizer("edm_bus", init, step)
+
+
+def make_edm_bus_ef(alpha: float, beta: float, mix: Mixer, codec, *,
+                    block_rows: int | None = None,
+                    use_fused_kernel: bool = False,
+                    update=None,
+                    error_feedback: bool = True) -> DecOptimizer:
+    """Bus-resident EDM with an **error-feedback-compressed wire**
+    (DESIGN §9): the bus analogue of :func:`make_edm_ef`, with the
+    quantize + residual-update fused into the EDM Pallas pass
+    (:func:`repro.kernels.ops.edm_update_bus_ef`) and the decode folded
+    into the mixer's combine.  Per step::
+
+        m'  = β m + (1-β) g
+        ψ'  = x − α m'
+        c   = (ψ' + x − ψ) + e          (φ plus the carried residual)
+        pay = encode(c)                 (the wire payload — codec format)
+        e'  = c − decode(pay)           (sender-local, cross-round carry)
+        x'  = mix(pay)                  (wire-coded engine → f32 mix)
+
+    ``mix`` must accept the codec's *encoded* payload and return the f32
+    mixed bus (``make_mixer(..., wire=codec)``).  State is
+    ``{m, psi, e}`` — the residual is a bus-shaped f32 buffer, so it rides
+    the existing bus checkpoint/resize machinery unchanged.
+
+    ``update`` overrides the fused call with a caller-built
+    ``update(x, g, m, psi, e) -> (m', ψ', payload, e')`` — the
+    shard-resident hook, mirroring :func:`make_edm_bus`.
+
+    ``error_feedback=False`` drops the residual (``pay = encode(φ)``,
+    ``e' = e = 0``): the *naive quantization* negative control the §E.1/E.2
+    divergence gates use to document the floor blowup EF prevents.  Not a
+    production mode.
+    """
+
+    def init(x_bus) -> State:
+        return {"m": jnp.zeros_like(x_bus), "psi": jnp.copy(x_bus),
+                "e": jnp.zeros_like(x_bus)}
+
+    def step(x_bus, g_bus, state: State):
+        if update is not None:
+            assert error_feedback
+            m_new, psi_new, payload, e_new = update(
+                x_bus, g_bus, state["m"], state["psi"], state["e"])
+        elif use_fused_kernel and error_feedback and codec.fmt != "f32":
+            from repro.kernels import ops as kops
+            m_new, psi_new, payload, e_new = kops.edm_update_bus_ef(
+                x_bus, g_bus, state["m"], state["psi"], state["e"],
+                alpha=alpha, beta=beta, fmt=codec.fmt,
+                block_rows=codec.block_rows)
+        else:
+            from repro.core.wire import encode_ef
+            m_new = beta * state["m"] + (1.0 - beta) * g_bus
+            psi_new = x_bus - alpha * m_new
+            phi = psi_new + x_bus - state["psi"]
+            if error_feedback:
+                payload, e_new = encode_ef(codec, phi + state["e"])
+            else:
+                payload, e_new = codec.encode(phi), state["e"]
+        return mix(payload), {"m": m_new, "psi": psi_new, "e": e_new}
+
+    return DecOptimizer("edm_bus_ef", init, step)
 
 
 def make_ed(alpha: float, mix: Mixer, **_) -> DecOptimizer:

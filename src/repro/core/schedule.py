@@ -274,7 +274,7 @@ def term_wire_rows(topo: Topology, t: ShiftTerm,
 def wire_bytes_per_step(sched: GossipSchedule, step: int, *,
                         elems_per_agent: int, itemsize: int = 4,
                         agents_per_device: int = 1,
-                        engine: str = "ppermute") -> int:
+                        engine: str = "ppermute", codec=None) -> int:
     """Total bytes on the wire (summed over devices) for one gossip
     application at ``step``.
 
@@ -282,20 +282,29 @@ def wire_bytes_per_step(sched: GossipSchedule, step: int, *,
     (:func:`term_wire_rows`); ``shifts`` lowers every nonzero roll to a
     full-payload collective-permute (GSPMD; equals ppermute at B = 1);
     ``dense`` needs every remote row — an all-gather.
+
+    ``codec`` (a :class:`repro.core.wire.WireCodec`, DESIGN §9) derives the
+    per-agent payload bytes from the wire dtype plus the int8 per-block
+    scale sidecar instead of the uncompressed ``elems_per_agent ×
+    itemsize``; the engines permute the encoded components through the same
+    row plan, so the row counts are unchanged — only the bytes-per-row
+    factor shrinks.
     """
     topo = sched.round(step)
     A = topo.n_agents
     B = agents_per_device
     n_dev = A // B
+    bytes_per_agent = (codec.payload_bytes(elems_per_agent)
+                       if codec is not None else elems_per_agent * itemsize)
     wire_rows = getattr(topo, "wire_rows", None)
     if wire_rows is not None:
         # liveness-masked rounds (core.elastic.MaskedTopology) carry their
         # own per-agent source maps and account for themselves
-        return wire_rows(B, engine) * elems_per_agent * itemsize
+        return wire_rows(B, engine) * bytes_per_agent
     if engine == "dense":
         rows = (A - B) * n_dev          # every device gathers all remote rows
     elif engine == "shifts":
         rows = sum(1 for t in topo.terms if t.shift != 0) * A
     else:
         rows = sum(term_wire_rows(topo, t, B) for t in topo.terms) * n_dev
-    return rows * elems_per_agent * itemsize
+    return rows * bytes_per_agent

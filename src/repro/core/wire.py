@@ -1,0 +1,189 @@
+"""Quantized gossip wire: bf16 / int8 per-block-scaled bus payloads.
+
+Every gossip permute of the packed bus (DESIGN §5) ships an ``(A, rows,
+128)`` f32 superbuffer — 4 bytes/elem on the single hottest communication
+path.  This module is the wire codec layer (DESIGN §9): a
+:class:`WireCodec` encodes the bus payload into one of three wire formats
+before the collective-permutes and decodes it inside the combine, so the
+bytes that actually cross ICI/DCI shrink while every iterate, accumulator
+and combine stays f32.
+
+Wire formats (``WIRE_FORMATS``):
+
+* ``f32``  — identity; the pre-§9 wire, byte-exact legacy path.
+* ``bf16`` — round-to-nearest bf16 payload; 2 bytes/elem (2× cut).
+* ``int8`` — symmetric per-block int8 with one f32 scale per
+  ``(block_rows, 128)`` bus block; 1 byte/elem + 4/(block_rows·128)
+  scale overhead (≈4× cut).  The scale blocks ARE the fused kernels' grid
+  tiles, and :class:`~repro.core.bus.BusLayout` rounds ``rows`` to a
+  multiple of ``block_rows * shards`` — so every FSDP shard's row block
+  holds whole scale blocks and encodes/decodes **shard-locally** (the
+  ``agents="pod"`` composition of DESIGN §7 never crosses a shard
+  boundary for a scale).
+
+int8 block math (the reference the Pallas kernels mirror)::
+
+    absmax = max(|x|) over the (block_rows, 128) block (non-finite → 0)
+    scale  = absmax / 127
+    q      = clip(round(x * 127 / absmax), -127, 127)   int8
+    deq    = q * scale
+
+Guards: an all-zero block (the bus pad tail!) yields ``absmax == 0`` →
+``scale == 0`` and ``q == 0`` — no 0/0 NaN, and pads decode to EXACT zero,
+preserving the bus pad-zero contract the metrics rely on.  Non-finite
+inputs cannot poison a block: ±Inf saturates to ±127·scale of the finite
+absmax and NaN encodes to 0 (deterministic, never a garbage scale).
+
+Error feedback (DESIGN §9): EDM's bias-corrected payload φ = ψ' + x − ψ is
+a small difference of large iterates; quantizing it naively injects a
+*persistent* bias amplified by (1−λ)⁻¹ (the per-leaf ``edm_ef`` docstring
+measured ~200× floor inflation).  The bus-resident EF step therefore sends
+``Q(φ + e)`` and carries the residual ``e`` (see
+:func:`repro.core.optimizers.make_edm_bus_ef` and :func:`encode_ef`).
+
+Residual semantics under time-varying schedules — the §9 decision:
+**cross-round carry**.  The residual is *sender-local* (one bus-shaped
+buffer per agent, not per edge): every round encodes the full ``φ + e``
+once and ships the same payload to all of that round's targets — including
+the agent itself through its self term, so every receiver mixes the same
+quantized value and W φ̃ stays consensus-consistent.  A round that skips a
+peer (``RoundRobinExp`` rotating offsets, ``ElasticSchedule`` masked
+rounds) cannot orphan the residual: ``e`` is re-added to the *next*
+round's payload and each round's W is doubly stochastic, so the
+correction reaches every peer through the period product.  Dead agents
+under a liveness mask keep quantizing their weight-1 self term, and EF
+cancels the self-quantization drift the naive wire would accumulate.
+A per-round residual (reset e := 0 each round) would be naive
+quantization with extra steps — rejected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["WIRE_FORMATS", "WireCodec", "make_codec", "encode_ef"]
+
+WIRE_FORMATS = ("f32", "bf16", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Encode/decode one wire format for ``(..., rows, 128)`` f32 buses.
+
+    Hashable (frozen, scalar fields) so it can key jit static args.  The
+    encoded *payload* is the pytree the mixing engines permute leaf-wise:
+
+    * ``f32``  — the input array, untouched;
+    * ``bf16`` — one bf16 array of the input shape;
+    * ``int8`` — ``(q, scale)``: int8 data of the input shape + f32 scales
+      of shape ``(*batch, rows // block_rows)`` (one per grid tile, in
+      tile order — permuting both arrays with the same agent-axis plan
+      keeps every block next to its scale).
+    """
+
+    fmt: str
+    block_rows: int
+
+    def __post_init__(self):
+        assert self.fmt in WIRE_FORMATS, self.fmt
+        assert self.block_rows > 0 and self.block_rows % 8 == 0, \
+            self.block_rows
+
+    # ---- wire facts ------------------------------------------------------
+    @property
+    def wire_dtype(self):
+        return {"f32": jnp.float32, "bf16": jnp.bfloat16,
+                "int8": jnp.int8}[self.fmt]
+
+    def payload_bytes(self, n_elems: int) -> int:
+        """Modeled wire bytes for an ``n_elems``-element payload (data +
+        int8 per-block scale sidecar) — the number
+        :func:`repro.core.schedule.wire_bytes_per_step` multiplies rows
+        by, replacing the pre-§9 hardcoded 4 bytes/elem."""
+        from repro.core.bus import LANE
+        if self.fmt == "f32":
+            return 4 * n_elems
+        if self.fmt == "bf16":
+            return 2 * n_elems
+        n_blocks = math.ceil(n_elems / (self.block_rows * LANE))
+        return n_elems + 4 * n_blocks
+
+    def compression_ratio(self, n_elems: int) -> float:
+        """f32 bytes / this format's bytes for the same payload."""
+        return 4.0 * n_elems / self.payload_bytes(n_elems)
+
+    # ---- codec -----------------------------------------------------------
+    def _blocked(self, x):
+        *batch, rows, lane = x.shape
+        assert rows % self.block_rows == 0, (x.shape, self.block_rows)
+        nb = rows // self.block_rows
+        return x.reshape(*batch, nb, self.block_rows * lane), nb
+
+    def encode(self, x):
+        """f32 ``(..., rows, 128)`` bus → wire payload (pure jnp; the
+        fused path is ``repro.kernels.ops.edm_update_bus_ef``)."""
+        if self.fmt == "f32":
+            return x
+        if self.fmt == "bf16":
+            return x.astype(jnp.bfloat16)
+        blocks, nb = self._blocked(x)
+        mag = jnp.where(jnp.isfinite(blocks), jnp.abs(blocks), 0.0)
+        absmax = jnp.max(mag, axis=-1)
+        scale = absmax / 127.0
+        inv = jnp.where(absmax > 0.0, 127.0 / jnp.maximum(absmax, 1e-30),
+                        0.0)
+        q = jnp.clip(jnp.round(blocks * inv[..., None]), -127.0, 127.0)
+        q = jnp.where(jnp.isnan(blocks), 0.0, q)     # NaN → 0, ±Inf → ±127
+        return (q.astype(jnp.int8).reshape(x.shape), scale)
+
+    def decode(self, payload):
+        """Wire payload → f32 bus."""
+        if self.fmt == "f32":
+            return payload
+        if self.fmt == "bf16":
+            return payload.astype(jnp.float32)
+        q, scale = payload
+        blocks, nb = self._blocked(q.astype(jnp.float32))
+        return (blocks * scale[..., None]).reshape(q.shape)
+
+    def quantize(self, x):
+        """The quantization operator Q = decode ∘ encode (the reference
+        oracle: permutes commute with decode, so the wire-coded engines
+        must equal the f32 engines applied to ``quantize(x)`` exactly)."""
+        return self.decode(self.encode(x))
+
+    # ---- payload-as-pytree helpers --------------------------------------
+    def payload_leaves(self, payload):
+        """The payload's arrays in canonical order (data first)."""
+        return payload if self.fmt == "int8" else (payload,)
+
+    def payload_from_leaves(self, leaves):
+        leaves = tuple(leaves)
+        return leaves if self.fmt == "int8" else leaves[0]
+
+    def map_payload(self, fn, payload):
+        """Apply an array op (a permute) to every payload component."""
+        return self.payload_from_leaves(
+            fn(l) for l in self.payload_leaves(payload))
+
+
+def make_codec(fmt: str, block_rows: int) -> WireCodec:
+    """Wire codec for ``fmt`` ∈ WIRE_FORMATS with the bus layout's
+    ``block_rows`` as the int8 scale-block height (= the fused kernels'
+    grid tile, so scales and tiles are the same partition)."""
+    return WireCodec(fmt=fmt, block_rows=block_rows)
+
+
+def encode_ef(codec: WireCodec, c):
+    """Error-feedback encode: ``(payload, residual)`` for the corrected
+    payload ``c = φ + e`` — the jnp reference of the fused
+    quantize+residual pass (``edm_update_bus_ef``), and the overlap
+    pipeline's issue-time encode (DESIGN §9: quantize at issue time,
+    residual accounted at complete time)."""
+    payload = codec.encode(c)
+    if codec.fmt == "f32":
+        return payload, jnp.zeros_like(c)
+    return payload, c - codec.decode(payload)

@@ -39,7 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["edm_update_flat", "gossip_axpy_flat", "BLOCK_ROWS", "LANE"]
+__all__ = ["edm_update_flat", "edm_update_ef_flat", "gossip_axpy_flat",
+           "gossip_axpy_q8_flat", "BLOCK_ROWS", "LANE"]
 
 def _env_block_rows() -> int:
     """Grid-tile height: the knob the real-TPU tuning sweep turns.  Read
@@ -96,6 +97,93 @@ def edm_update_flat(x, g, m, psi, *, alpha: float, beta: float,
     )(x, g, m, psi)
 
 
+def _edm_ef_bf16_kernel(x_ref, g_ref, m_ref, psi_ref, e_ref,
+                        m_out, psi_out, q_out, e_out, *,
+                        alpha: float, beta: float):
+    # EDM chain + error-feedback bf16 quantize in ONE pass: the corrected
+    # payload c = φ + e rounds to bf16 on the wire, and the rounding error
+    # stays behind as the next residual.  5 reads + 4 writes — no extra HBM
+    # round trip vs the uncompressed kernel's 4+3 (e in, e out, φ→q swap).
+    x = x_ref[...]
+    m_new = beta * m_ref[...] + (1.0 - beta) * g_ref[...]
+    psi_new = x - alpha * m_new
+    c = psi_new + x - psi_ref[...] + e_ref[...]
+    q = c.astype(jnp.bfloat16)
+    m_out[...] = m_new
+    psi_out[...] = psi_new
+    q_out[...] = q
+    e_out[...] = c - q.astype(jnp.float32)
+
+
+def _edm_ef_int8_kernel(x_ref, g_ref, m_ref, psi_ref, e_ref,
+                        m_out, psi_out, q_out, s_out, e_out, *,
+                        alpha: float, beta: float):
+    # int8 variant: the grid tile IS the scale block (block_rows, 128) — one
+    # symmetric absmax scale per tile, written to a (1, 1) SMEM slot.  Guards
+    # mirror core/wire.py: non-finite values are masked out of absmax, NaN
+    # encodes to 0, ±Inf saturates to ±127; an all-zero tile (the bus pad
+    # tail) gets scale 0 and q 0 — no 0/0.
+    x = x_ref[...]
+    m_new = beta * m_ref[...] + (1.0 - beta) * g_ref[...]
+    psi_new = x - alpha * m_new
+    c = psi_new + x - psi_ref[...] + e_ref[...]
+    mag = jnp.where(jnp.isfinite(c), jnp.abs(c), 0.0)
+    absmax = jnp.max(mag)
+    scale = absmax / 127.0
+    inv = jnp.where(absmax > 0.0, 127.0 / jnp.maximum(absmax, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(c * inv), -127.0, 127.0)
+    q = jnp.where(jnp.isnan(c), 0.0, q)
+    m_out[...] = m_new
+    psi_out[...] = psi_new
+    q_out[...] = q.astype(jnp.int8)
+    s_out[0, 0] = scale
+    e_out[...] = c - q * scale
+
+
+def edm_update_ef_flat(x, g, m, psi, e, *, alpha: float, beta: float,
+                       fmt: str, block_rows: int = BLOCK_ROWS,
+                       interpret: bool = False):
+    """Fused EDM + error-feedback quantize over (rows, 128) f32 buffers.
+
+    Returns ``(m', ψ', q, e')`` for ``fmt="bf16"`` and
+    ``(m', ψ', q, scale, e')`` for ``fmt="int8"`` with ``scale`` shaped
+    ``(rows // block_rows, 1)`` f32 (one per grid tile, SMEM-written).
+    ``fmt="f32"`` has no quantize to fuse — callers use
+    :func:`edm_update_flat`.
+    """
+    rows, lane = x.shape
+    assert lane == LANE and rows % block_rows == 0, (x.shape, block_rows)
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    f32 = jax.ShapeDtypeStruct(x.shape, jnp.float32)
+    kern = functools.partial(
+        {"bf16": _edm_ef_bf16_kernel, "int8": _edm_ef_int8_kernel}[fmt],
+        alpha=alpha, beta=beta)
+    if fmt == "bf16":
+        out_specs = [spec, spec, spec, spec]
+        out_shape = [f32, f32,
+                     jax.ShapeDtypeStruct(x.shape, jnp.bfloat16), f32]
+    else:
+        if not interpret:
+            # int8 VMEM tiles are (32, 128) minimum on TPU.
+            assert block_rows % 32 == 0, block_rows
+        s_spec = pl.BlockSpec((1, 1), lambda i: (i, 0),
+                              memory_space=pltpu.SMEM)
+        out_specs = [spec, spec, spec, s_spec, spec]
+        out_shape = [f32, f32,
+                     jax.ShapeDtypeStruct(x.shape, jnp.int8),
+                     jax.ShapeDtypeStruct((rows // block_rows, 1),
+                                          jnp.float32), f32]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, g, m, psi, e)
+
+
 def _axpy_kernel(w_ref, *refs):
     # refs = (in_0, ..., in_{n-1}, out); w_ref = (1, n) weights in SMEM —
     # runtime values, so one compiled kernel serves every weight set of one
@@ -110,7 +198,7 @@ def _axpy_kernel(w_ref, *refs):
 
 
 def gossip_axpy_flat(operands, weights, *, block_rows: int | None = None,
-                     interpret: bool = False):
+                     interpret: bool = False, out_dtype=None):
     """Fused n-ary gossip combine  Σₖ wₖ·operandₖ  over (rows, 128) tiles.
 
     ``operands`` are the post-permute neighbor payloads of one gossip step
@@ -118,8 +206,10 @@ def gossip_axpy_flat(operands, weights, *, block_rows: int | None = None,
     matching mixing weights — floats or a traced (n,) array; they enter the
     kernel as an SMEM operand, so the compiled kernel is keyed on the
     *arity* n, not the weight values.  All operands share one shape/dtype
-    (f32 or bf16); accumulation is f32, output dtype follows the operands.
-    The ring case of the paper's experiments is the 3-ary instance
+    (f32 or bf16); accumulation is f32, output dtype follows the operands
+    unless ``out_dtype`` overrides it (the wire-decode combine stores f32
+    from bf16 payloads so the mixed iterate never re-rounds).  The ring
+    case of the paper's experiments is the 3-ary instance
     (center/left/right).
     """
     if block_rows is None:
@@ -133,12 +223,61 @@ def gossip_axpy_flat(operands, weights, *, block_rows: int | None = None,
     assert all(o.shape == operands[0].shape and o.dtype == operands[0].dtype
                for o in operands)
     spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    if out_dtype is None:
+        out_dtype = operands[0].dtype
     return pl.pallas_call(
         _axpy_kernel,
         grid=(rows // block_rows,),
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
         + [spec] * len(operands),
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct(operands[0].shape, operands[0].dtype),
+        out_shape=jax.ShapeDtypeStruct(operands[0].shape, out_dtype),
         interpret=interpret,
     )(w, *operands)
+
+
+def _axpy_q8_kernel(coef_ref, *refs):
+    # refs = (q_0, ..., q_{n-1}, out); coef_ref = (n, n_tiles) f32 in SMEM
+    # holding wₖ · scaleₖ[tile] — the wire decode is FOLDED into the
+    # combine: int8 payloads widen to f32 exactly once, already weighted
+    # and dequantized, and the mixed bus stores f32.
+    o_ref = refs[-1]
+    i = pl.program_id(0)
+    acc = coef_ref[0, i] * refs[0][...].astype(jnp.float32)
+    for k, r in enumerate(refs[1:-1], start=1):
+        acc += coef_ref[k, i] * r[...].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+def gossip_axpy_q8_flat(operands, coefs, *, block_rows: int | None = None,
+                        interpret: bool = False):
+    """Fused dequantize-and-combine  Σₖ wₖ·scaleₖ·qₖ  for int8 wire payloads.
+
+    ``operands`` are (rows, 128) int8 post-permute payloads; ``coefs`` is a
+    traced (n, rows // block_rows) f32 array of per-operand per-tile
+    ``weight × scale`` products (computed outside: both are tiny).  Output
+    is the decoded f32 mix.  Like :func:`gossip_axpy_flat`, the compiled
+    kernel is keyed on arity and shape only.
+    """
+    if block_rows is None:
+        block_rows = BLOCK_ROWS
+    operands = tuple(operands)
+    rows, lane = operands[0].shape
+    n_tiles = rows // block_rows
+    coefs = jnp.asarray(coefs, jnp.float32).reshape(len(operands), n_tiles)
+    assert lane == LANE and rows % block_rows == 0, (operands[0].shape,
+                                                     block_rows)
+    if not interpret:
+        assert block_rows % 32 == 0, block_rows  # int8 min tile (32, 128)
+    assert all(o.shape == operands[0].shape and o.dtype == jnp.int8
+               for o in operands)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        _axpy_q8_kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
+        + [spec] * len(operands),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(operands[0].shape, jnp.float32),
+        interpret=interpret,
+    )(coefs, *operands)

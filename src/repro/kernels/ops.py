@@ -13,10 +13,13 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from .edm_update import BLOCK_ROWS, LANE, edm_update_flat, gossip_axpy_flat
+from .edm_update import (BLOCK_ROWS, LANE, edm_update_flat,
+                         edm_update_ef_flat, gossip_axpy_flat,
+                         gossip_axpy_q8_flat)
 from .flash_attention import flash_attention_kernel_call
 
-__all__ = ["edm_update", "edm_update_tree", "edm_update_bus", "gossip_axpy",
+__all__ = ["edm_update", "edm_update_tree", "edm_update_bus",
+           "edm_update_bus_ef", "gossip_axpy", "gossip_axpy_wire",
            "flash_attention", "padded_size"]
 
 
@@ -102,6 +105,45 @@ def edm_update_bus(x, g, m, psi, *, alpha: float, beta: float,
     return (m2.reshape(x.shape), psi2.reshape(x.shape), phi.reshape(x.shape))
 
 
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "fmt",
+                                             "block_rows", "interpret"))
+def edm_update_bus_ef(x, g, m, psi, e, *, alpha: float, beta: float,
+                      fmt: str, block_rows: int | None = None,
+                      interpret: bool | None = None):
+    """Bus-resident fused EDM update **with error-feedback quantization**
+    (DESIGN §9): one pallas_call computes m', ψ', the wire payload
+    ``Q(φ + e)`` and the next residual ``e' = (φ + e) − decode(Q(φ + e))``
+    in a single pass over the ``(A, rows, 128)`` superbuffer — quantize and
+    residual-update share the VMEM tile, no extra HBM round trips.
+
+    Returns ``(m', ψ', payload, e')`` where ``payload`` is the wire-format
+    pytree of :class:`repro.core.wire.WireCodec`: a bf16 bus for
+    ``fmt="bf16"``, ``(q int8 bus, (A, rows // block_rows) f32 scales)``
+    for ``fmt="int8"``.  The bus layout quantizes rows to a multiple of
+    ``block_rows × shards``, so under ``agents="pod"`` each shard's row
+    block holds whole scale blocks and this runs shard-locally unchanged.
+    """
+    if block_rows is None:
+        block_rows = BLOCK_ROWS
+    if interpret is None:
+        interpret = not _on_tpu()
+    A, rows, lane = x.shape
+    assert lane == LANE and rows % block_rows == 0, (x.shape, block_rows)
+    flat = lambda b: b.reshape(A * rows, LANE)
+    outs = edm_update_ef_flat(flat(x), flat(g), flat(m), flat(psi), flat(e),
+                              alpha=alpha, beta=beta, fmt=fmt,
+                              block_rows=block_rows, interpret=interpret)
+    if fmt == "bf16":
+        m2, psi2, q, e2 = outs
+        payload = q.reshape(x.shape)
+    else:
+        m2, psi2, q, scale, e2 = outs
+        payload = (q.reshape(x.shape),
+                   scale.reshape(A, rows // block_rows))
+    return (m2.reshape(x.shape), psi2.reshape(x.shape), payload,
+            e2.reshape(x.shape))
+
+
 def edm_update_tree(params: Any, grads: Any, m: Any, psi: Any, *,
                     alpha: float, beta: float) -> Tuple[Any, Any, Any]:
     """Pytree-level fused update: returns (m', φ, ψ') trees (optimizer order)."""
@@ -117,14 +159,17 @@ def edm_update_tree(params: Any, grads: Any, m: Any, psi: Any, *,
     return m_new, phi, psi_new
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def _gossip_axpy_jit(operands, weights, block_rows, interpret):
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "out_dtype"))
+def _gossip_axpy_jit(operands, weights, block_rows, interpret,
+                     out_dtype=None):
     first = operands[0]
     packed = [_pack(o, block_rows, dtype=None)[0] for o in operands]
     n = first.size
     out = gossip_axpy_flat(packed, weights, block_rows=block_rows,
-                           interpret=interpret)
-    return _unpack(out, n, first.shape, first.dtype)
+                           interpret=interpret, out_dtype=out_dtype)
+    return _unpack(out, n, first.shape,
+                   first.dtype if out_dtype is None else out_dtype)
 
 
 def gossip_axpy(operands, weights, *, block_rows: int | None = None,
@@ -146,6 +191,49 @@ def gossip_axpy(operands, weights, *, block_rows: int | None = None,
     return _gossip_axpy_jit(tuple(operands),
                             jnp.asarray(weights, jnp.float32),
                             block_rows, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block_rows",
+                                             "interpret"))
+def _gossip_axpy_wire_jit(payloads, weights, fmt, block_rows, interpret):
+    if fmt in ("f32", "bf16"):
+        # bf16 wire: accumulate f32 in-kernel, store the mixed bus f32 —
+        # the decode is the astype the axpy kernel already performs.
+        return _gossip_axpy_jit(payloads, weights, block_rows, interpret,
+                                out_dtype=jnp.float32)
+    qs, scales = zip(*payloads)
+    first = qs[0]
+    flat_qs = tuple(q.reshape(-1, LANE) for q in qs)
+    # (n, n_tiles) weight × per-tile-scale products: scales flatten in the
+    # same (agent-major) order the flattened bus tiles do, because rows is
+    # a multiple of block_rows per agent.
+    coefs = (jnp.asarray(weights, jnp.float32)[:, None]
+             * jnp.stack([s.reshape(-1) for s in scales]))
+    out = gossip_axpy_q8_flat(flat_qs, coefs, block_rows=block_rows,
+                              interpret=interpret)
+    return out.reshape(first.shape)
+
+
+def gossip_axpy_wire(payloads, weights, *, fmt: str,
+                     block_rows: int | None = None,
+                     interpret: bool | None = None):
+    """Fused decode-and-combine for wire-format gossip payloads
+    (DESIGN §9): ``Σₖ wₖ · decode(payloadₖ)`` with the dequantize folded
+    into the n-ary combine — int8/bf16 payloads widen to f32 exactly once,
+    inside the kernel, and the mixed bus comes out f32.
+
+    ``payloads`` are post-permute :class:`~repro.core.wire.WireCodec`
+    payloads of one arity: f32/bf16 arrays, or ``(q, scale)`` pairs whose
+    ``scale`` carries one f32 per ``(block_rows, 128)`` block in tile
+    order.  ``weights`` are traced data, as in :func:`gossip_axpy`.
+    """
+    if block_rows is None:
+        block_rows = BLOCK_ROWS
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _gossip_axpy_wire_jit(tuple(payloads),
+                                 jnp.asarray(weights, jnp.float32),
+                                 fmt, block_rows, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",

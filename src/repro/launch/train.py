@@ -21,7 +21,7 @@ from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.train import (build_train_step, bus_layout_for, checkpoint,
                          init_state, make_gossip_schedule, use_overlap,
-                         use_packed_bus)
+                         use_packed_bus, use_wire)
 
 
 def main():
@@ -38,6 +38,8 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--per-agent-batch", type=int, default=1)
     ap.add_argument("--algorithm", default="edm")
+    ap.add_argument("--optimizer", dest="algorithm", default="edm",
+                    help="alias for --algorithm (e.g. edm, edm_ef, dsgd)")
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--pods", type=int, default=1,
                     help="pod count for torus/hier topologies; with "
@@ -75,6 +77,14 @@ def main():
                          "before the backward pass and combines after it "
                          "(one-step-stale mixing; needs the packed bus), "
                          "'off' keeps gossip synchronous")
+    ap.add_argument("--wire", default="f32", choices=["f32", "bf16", "int8"],
+                    help="gossip wire format (DESIGN §9): 'bf16'/'int8' "
+                         "quantize the bus permute payloads through the "
+                         "error-feedback codec (int8 carries per-block f32 "
+                         "scales; a bus-shaped residual rides in the opt "
+                         "state), cutting wire bytes 2x / ~4x at the f32 "
+                         "divergence floor.  Needs the packed bus; composes "
+                         "with --overlap delayed and --agents pod")
     ap.add_argument("--alpha", type=float, default=0.2)
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--phi", type=float, default=0.2,
@@ -116,7 +126,7 @@ def main():
                     gossip_seed=args.gossip_seed,
                     agents_per_device=args.agents_per_device,
                     packed_bus=args.packed_bus, overlap=args.overlap,
-                    remat=False)
+                    wire=args.wire, remat=False)
     sched = make_gossip_schedule(run, n_agents,
                                  pods=1 if pod_agents else args.pods,
                                  churn=args.churn or None)
@@ -143,7 +153,8 @@ def main():
           f"alg={args.algorithm} engine={args.gossip_engine}"
           f"{' +fused' if args.fused_kernel else ''}"
           f"{' +bus' if use_packed_bus(run) else ''}"
-          f"{' +overlap' if use_overlap(run) else ''}")
+          f"{' +overlap' if use_overlap(run) else ''}"
+          f"{' wire=' + use_wire(run) if use_wire(run) != 'f32' else ''}")
 
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        n_agents=n_agents, phi=args.phi)

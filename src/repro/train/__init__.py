@@ -2,6 +2,6 @@
 from .trainer import (  # noqa: F401
     TrainState, batch_spec_tree, build_train_step, bus_layout_for,
     gossip_round_step, init_state, make_gossip_schedule, make_topology,
-    prepend_agent_axis, state_specs, use_overlap, use_packed_bus,
+    prepend_agent_axis, state_specs, use_overlap, use_packed_bus, use_wire,
 )
 from . import checkpoint  # noqa: F401

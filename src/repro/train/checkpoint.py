@@ -137,10 +137,25 @@ def load_state(path: str, like: Any, layout: Optional[Any] = None) -> Any:
     only the live payload: the restored ``slot[2]`` holds φ(t) in BOTH
     slots, so ``slot[parity]`` is correct for any stored parity and the
     first resumed step overwrites the spare exactly as the uninterrupted
-    run would."""
+    run would.
+
+    Wire-format changes across a restart (DESIGN §9): a checkpoint saved
+    by an f32-wire run carries no ``opt["e"]`` residual — resuming it
+    under ``wire ∈ {bf16, int8}`` zero-fills the residual, which is the
+    EF-correct cold start (e(0) = 0).  The reverse direction (compressed
+    → f32) needs nothing: :func:`load` reads only the keys the new state
+    asks for, so a stale residual in the file is simply ignored."""
     import jax.numpy as jnp
 
     like2 = dict(like)
+    e_like = None
+    opt_like = like2.get("opt")
+    if isinstance(opt_like, dict) and "e" in opt_like:
+        have = set(np.load(path).files)
+        if not any(k.split(_SEP)[:2] == ["opt", "e"] for k in have):
+            opt_like = dict(opt_like)
+            e_like = opt_like.pop("e")
+            like2["opt"] = opt_like
     pipe_like = like2.pop("pipeline", None)
     if pipe_like is not None:
         slot = pipe_like["slot"]
@@ -154,6 +169,10 @@ def load_state(path: str, like: Any, layout: Optional[Any] = None) -> Any:
         phi = jnp.asarray(pp["phi"])
         tree["pipeline"] = {"slot": jnp.stack([phi, phi]),
                             "parity": jnp.asarray(pp["parity"], jnp.int32)}
+    if e_like is not None:
+        tree["opt"] = dict(tree["opt"])
+        tree["opt"]["e"] = jax.tree.map(
+            lambda l: jnp.zeros(tuple(l.shape), l.dtype), e_like)
     return tree
 
 

@@ -20,9 +20,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import (GossipSchedule, StaticSchedule, Topology,
-                        accumulate_f32, make_edm_bus, make_mixer,
-                        make_optimizer, make_overlap_mixer, make_schedule,
+                        accumulate_f32, make_codec, make_edm_bus,
+                        make_edm_bus_ef, make_mixer, make_optimizer,
+                        make_overlap_mixer, make_schedule,
                         make_schedule_mixer)
+from repro.core.optimizers import DecOptimizer
+from repro.core.wire import WIRE_FORMATS, encode_ef
 from repro.core import bus as parambus
 from repro.core.metrics import bus_consensus, bus_grad_norm, consensus_distance
 from repro.models.api import Model
@@ -32,7 +35,7 @@ __all__ = [
     "TrainState", "build_train_step", "init_state", "state_specs",
     "make_topology", "make_gossip_schedule", "gossip_round_step",
     "prepend_agent_axis", "batch_spec_tree", "use_packed_bus",
-    "use_overlap", "bus_layout_for",
+    "use_overlap", "use_wire", "bus_layout_for",
 ]
 
 
@@ -136,9 +139,33 @@ def use_overlap(run: RunConfig) -> bool:
         "overlap='delayed' composes with gossip_every=1 only (the pipeline " \
         "keeps a payload in flight every step)"
     assert run.gossip_dtype in ("float32", "", None), \
-        "overlap='delayed' ships the f32 bus payload (cast-on-wire is a " \
-        "synchronous-path lever; see DESIGN §6 fallback matrix)"
+        "overlap='delayed' rejects the gossip_dtype cast lever (a " \
+        "synchronous-path lever; use the error-feedback wire codec " \
+        "RunConfig.wire instead — it composes, DESIGN §6/§9 fallback matrix)"
     return True
+
+
+def use_wire(run: RunConfig) -> str:
+    """Resolve ``RunConfig.wire`` (DESIGN §9) to a wire format string.
+
+    ``"f32"`` is the byte-identical legacy wire on every path.  ``"bf16"``
+    and ``"int8"`` require the packed bus (the codec operates on the
+    ``(A, rows, 128)`` superbuffer and the residual is bus-shaped) and are
+    mutually exclusive with the ``gossip_dtype`` cast lever — the codec
+    subsumes it: same 2× bytes at bf16, but error-feedback-correct and
+    composing with ``overlap="delayed"`` and ``agents="pod"``."""
+    fmt = run.wire or "f32"
+    assert fmt in WIRE_FORMATS, \
+        f"RunConfig.wire must be one of {WIRE_FORMATS}, got {fmt!r}"
+    if fmt == "f32":
+        return fmt
+    assert use_packed_bus(run), \
+        "wire != 'f32' needs the packed bus (DESIGN §9): the codec and the " \
+        "bus-resident residual operate on the (A, rows, 128) superbuffer"
+    assert run.gossip_dtype in ("float32", "", None), \
+        "wire != 'f32' is mutually exclusive with gossip_dtype != float32 " \
+        "(the error-feedback codec replaces the cast-on-wire lever)"
+    return fmt
 
 
 def bus_layout_for(model: Model, n_agents: int,
@@ -229,6 +256,12 @@ def build_train_step(model: Model, run: RunConfig, topo,
         bus_spec = P(agent_entry, shard_axes)
     layout = (bus_layout_for(model, sched.n_agents, shards=shards)
               if packed else None)
+    wire_fmt = use_wire(run)
+    # the codec's int8 scale blocks ARE the layout's (block_rows, 128) grid
+    # tiles, and rows is a multiple of block_rows × shards — shard-local
+    # encode/decode by construction (DESIGN §9).
+    codec = (make_codec(wire_fmt, layout.block_rows)
+             if packed and wire_fmt != "f32" else None)
 
     def pin_bus(b):
         """Keep bus-shaped intermediates row-sharded (no-op off pod mode)."""
@@ -239,6 +272,7 @@ def build_train_step(model: Model, run: RunConfig, topo,
             b, NamedSharding(mesh, bus_spec))
 
     fused_update = None
+    fused_update_ef = None
     if packed and shard_axes is not None and use_fused_kernel:
         # shard-local fused EDM update: one pallas_call per shard over its
         # own (A_local, rows/S, 128) block — griddable by layout contract.
@@ -252,15 +286,55 @@ def build_train_step(model: Model, run: RunConfig, topo,
             return _shard_map(body, mesh, (bus_spec,) * 4,
                               (bus_spec,) * 3)(x, g, m, psi)
 
+        if codec is not None:
+            # shard-local fused EDM + EF quantize: the payload out-specs
+            # mirror the codec pytree (int8 scales are (A, nb) row-sharded
+            # like the bus — whole scale blocks per shard by layout).
+            pay_spec = ((bus_spec, bus_spec) if codec.fmt == "int8"
+                        else bus_spec)
+
+            def fused_update_ef(x, g, m, psi, e):
+                body = functools.partial(kops.edm_update_bus_ef,
+                                         alpha=run.alpha, beta=run.beta,
+                                         fmt=codec.fmt,
+                                         block_rows=layout.block_rows)
+                return _shard_map(body, mesh, (bus_spec,) * 5,
+                                  (bus_spec, bus_spec, pay_spec,
+                                   bus_spec))(x, g, m, psi, e)
+
     base_mix = None
     if not overlap:
         base_mix = make_schedule_mixer(
             sched, engine=run.gossip_engine, mesh=mesh, agent_axes=agent_axes,
-            use_fused_kernel=use_fused_kernel, shard_axes=shard_axes)
+            use_fused_kernel=use_fused_kernel, shard_axes=shard_axes,
+            wire=codec)
 
     def opt_at(step, mix_override=None):
         """Algorithm with the mixer bound to ``step``'s gossip round (the
-        bus-resident EDM when the packed bus is active)."""
+        bus-resident EDM when the packed bus is active; its EF-compressed
+        variant when a wire codec is active, DESIGN §9)."""
+        if packed and codec is not None:
+            if mix_override is not None:
+                # gossip-skipped local step (gossip_every > 1): plain EDM
+                # recursion, nothing on the wire, so nothing is quantized
+                # and the residual carries untouched to the next gossiping
+                # step (cross-round carry, DESIGN §9).
+                inner = make_edm_bus(run.alpha, run.beta, mix_override,
+                                     block_rows=layout.block_rows,
+                                     use_fused_kernel=use_fused_kernel,
+                                     update=fused_update)
+
+                def local_step(x, g, st):
+                    x2, sub = inner.step(x, g, {"m": st["m"],
+                                                "psi": st["psi"]})
+                    return x2, {**sub, "e": st["e"]}
+
+                return DecOptimizer("edm_bus_local", inner.init, local_step)
+            return make_edm_bus_ef(run.alpha, run.beta,
+                                   functools.partial(base_mix, step=step),
+                                   codec, block_rows=layout.block_rows,
+                                   use_fused_kernel=use_fused_kernel,
+                                   update=fused_update_ef)
         mix = mix_override if mix_override is not None else _cast_mixer(
             functools.partial(base_mix, step=step), run.gossip_dtype)
         if packed:
@@ -299,7 +373,7 @@ def build_train_step(model: Model, run: RunConfig, topo,
         issue, complete = make_overlap_mixer(
             sched, engine=run.gossip_engine, mesh=mesh,
             agent_axes=agent_axes, use_fused_kernel=use_fused_kernel,
-            shard_axes=shard_axes)
+            shard_axes=shard_axes, wire=codec)
         if straggler_plan is not None:
             assert straggler_plan.n_terms == complete.n_terms, \
                 f"StragglerPlan.n_terms={straggler_plan.n_terms} must match " \
@@ -313,26 +387,55 @@ def build_train_step(model: Model, run: RunConfig, topo,
                                  use_fused_kernel=use_fused_kernel,
                                  update=fused_update)
 
+        def encode_pipeline(c):
+            """Issue-time EF encode of the corrected payload c = φ + e
+            (DESIGN §9: quantize at issue time, residual accounted at
+            complete time).  Shard_map-wrapped in shard-resident mode so
+            the per-block reductions never tempt GSPMD into a gather."""
+            if bus_spec is None:
+                return encode_ef(codec, c)
+            from repro.compat import shard_map as _shard_map
+            pay_spec = ((bus_spec, bus_spec) if codec.fmt == "int8"
+                        else bus_spec)
+            return _shard_map(functools.partial(encode_ef, codec), mesh,
+                              (bus_spec,), (pay_spec, bus_spec))(c)
+
         def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
             pipe = state["pipeline"]
             phi = parambus.pipeline_payload(pipe)
             g_step = state["step"]          # gossip_every == 1 under overlap
             # ISSUE: put the round's permutes of φ(t) on the wire — nothing
-            # below until `complete` depends on them.
-            payloads = issue(phi, g_step)
+            # below until `complete` depends on them.  With a wire codec the
+            # payload is quantized HERE (φ(t) + e(t) encoded, residual split
+            # off), so the in-flight bytes are already compressed; the
+            # pipeline buffer itself stays f32 (checkpoint/resize shapes are
+            # wire-independent).
+            if codec is not None:
+                c = pin_bus(phi + state["opt"]["e"])
+                enc, e_new = encode_pipeline(c)
+                payloads = issue(enc, g_step)
+            else:
+                payloads = issue(phi, g_step)
             # COMPUTE: gradients at the pre-mix local iterate φ(t); the
             # whole fwd/bwd is independent of the in-flight permutes.
             params_tree = parambus.unpack_tree(layout, phi)
             losses, grads = grad_fn(params_tree, batch)
             grads = scaled_grads(grads, state["step"])
             g_bus = pin_bus(parambus.pack_tree(layout, grads))
-            # COMPLETE: weighted combine of the landed payloads, then the
-            # bus-resident EDM update on the mixed iterate x(t) = W(t) φ(t).
-            # Late slots (straggler_plan) degrade to self-weight (DESIGN §8).
+            # COMPLETE: weighted combine of the landed payloads (decode
+            # folded in when wire-coded), then the bus-resident EDM update
+            # on the mixed iterate x(t) = W(t) φ̃(t).  Late slots
+            # (straggler_plan) degrade to self-weight (DESIGN §8).
             late = (straggler_plan.late_at(g_step)
                     if straggler_plan is not None else None)
             x_mixed = complete(payloads, g_step, late=late)
-            phi_new, new_opt = local_opt.step(x_mixed, g_bus, state["opt"])
+            if codec is not None:
+                sub = {"m": state["opt"]["m"], "psi": state["opt"]["psi"]}
+                phi_new, new_opt = local_opt.step(x_mixed, g_bus, sub)
+                new_opt = {**new_opt, "e": e_new}
+            else:
+                phi_new, new_opt = local_opt.step(x_mixed, g_bus,
+                                                  state["opt"])
             metrics = {
                 "loss": jnp.mean(losses),
                 "consensus": bus_consensus(x_mixed),
@@ -410,7 +513,12 @@ def init_state(model: Model, run: RunConfig, n_agents: int, key,
         x_bus = parambus.pack_tree(layout, params)
         opt = make_edm_bus(run.alpha, run.beta, mix=lambda t: t,
                            block_rows=layout.block_rows)
-        state = {"params": x_bus, "opt": opt.init(x_bus),
+        opt_state = opt.init(x_bus)
+        if use_wire(run) != "f32":
+            # bus-shaped EF residual (DESIGN §9), e(0) = 0: step 0 then
+            # sends Q(φ(0)) exactly like the synchronous compressed step.
+            opt_state["e"] = jnp.zeros_like(x_bus)
+        state = {"params": x_bus, "opt": opt_state,
                  "step": jnp.zeros((), jnp.int32)}
         if use_overlap(run):
             state["pipeline"] = parambus.make_pipeline(x_bus)
@@ -456,8 +564,10 @@ def state_specs(model: Model, run: RunConfig, multi_pod: bool) -> Dict[str, Any]
             # — rows/lane replicated (agents="data" has no FSDP axis free).
             agent_axis = ("pod", "data") if multi_pod else "data"
             spec = P(agent_axis)
-        specs = {"params": spec, "opt": {"m": spec, "psi": spec},
-                 "step": P()}
+        opt_specs = {"m": spec, "psi": spec}
+        if use_wire(run) != "f32":
+            opt_specs["e"] = spec   # bus-shaped residual shards like the bus
+        specs = {"params": spec, "opt": opt_specs, "step": P()}
         if use_overlap(run):
             # slot: (2, A, rows, 128) — the 2-slot dim replicated, then the
             # bus spec shifted right by one; parity is a replicated scalar.

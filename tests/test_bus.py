@@ -206,6 +206,39 @@ def test_edm_bus_matches_leafwise(fused):
     assert np.all(flat[:, mask] == 0)
 
 
+@pytest.mark.parametrize("fmt", ["f32", "bf16", "int8"])
+def test_edm_bus_ef_pad_stays_zero(fmt):
+    """Zero-preservation extends to every wire format (DESIGN §9): the
+    codec maps pad zeros to exact zero on the wire — int8's all-zero
+    blocks take scale 0 with no 0/0 NaN, and zeros inside mixed blocks
+    quantize to q = 0 — so the bus pad region AND the carried residual
+    stay identically zero across EF-compressed steps."""
+    from repro.core import make_edm_bus_ef
+    from repro.core.wire import make_codec
+
+    A = 4
+    topo = ring(A)
+    tree = jax.tree.map(lambda x: x.astype(jnp.float32), _ragged_tree(A))
+    grads = jax.tree.map(lambda x: 0.1 * x, tree)
+    layout = bus.make_layout(tree, block_rows=8)
+    codec = make_codec(fmt, layout.block_rows)
+    mix = make_mixer(topo, "dense", wire=codec)
+    opt = make_edm_bus_ef(0.05, 0.9, mix, codec,
+                          block_rows=layout.block_rows)
+    xb = bus.pack_tree(layout, tree)
+    stb = opt.init(xb)
+    gb = bus.pack_tree(layout, grads)
+    for _ in range(4):
+        xb, stb = opt.step(xb, gb, stb)
+    mask = np.ones(layout.rows * 128, bool)
+    for slot in layout.slots:
+        mask[slot.row * 128: slot.row * 128 + slot.size] = False
+    for name, buf in (("x", xb), ("e", stb["e"]), ("m", stb["m"]),
+                      ("psi", stb["psi"])):
+        flat = np.asarray(buf).reshape(A, -1)
+        assert np.all(flat[:, mask] == 0), (fmt, name)
+
+
 # ---------------------------------------------------------------------------
 # one edm_update pallas_call per bus step (trace-count acceptance)
 # ---------------------------------------------------------------------------
