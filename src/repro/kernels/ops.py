@@ -17,10 +17,11 @@ from .edm_update import (BLOCK_ROWS, LANE, edm_update_flat,
                          edm_update_ef_flat, gossip_axpy_flat,
                          gossip_axpy_q8_flat)
 from .flash_attention import flash_attention_kernel_call
+from .paged_attention import paged_attention_kernel_call
 
 __all__ = ["edm_update", "edm_update_tree", "edm_update_bus",
            "edm_update_bus_ef", "gossip_axpy", "gossip_axpy_wire",
-           "flash_attention", "padded_size"]
+           "flash_attention", "paged_attention", "padded_size"]
 
 
 def _on_tpu() -> bool:
@@ -246,4 +247,18 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         interpret = not _on_tpu()
     return flash_attention_kernel_call(q, k, v, causal=causal, window=window,
                                        blk_q=blk_q, blk_k=blk_k,
+                                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
+def paged_attention(q, k_pool, v_pool, page_table, kv_len, *,
+                    page_size: int, interpret: bool | None = None):
+    """Paged decode-attention (DESIGN §10): q (B, K, G, hd) slot-batched
+    single-token queries against (num_pages, page_size, K, hd) page pools,
+    gathered through a (B, n_pages) page table with per-slot ``kv_len``
+    masking.  Oracle: :func:`repro.kernels.ref.paged_attention_ref`."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return paged_attention_kernel_call(q, k_pool, v_pool, page_table, kv_len,
+                                       page_size=page_size,
                                        interpret=interpret)

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 
 from repro.models.attention import sdpa_ref
 
-__all__ = ["edm_update_ref", "gossip_axpy_ref", "flash_attention_ref"]
+__all__ = ["edm_update_ref", "gossip_axpy_ref", "flash_attention_ref",
+           "gather_pages", "paged_attention_ref"]
 
 
 def edm_update_ref(x, g, m, psi, *, alpha: float, beta: float):
@@ -29,3 +30,34 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     out = sdpa_ref(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
                    jnp.moveaxis(v, 1, 2), causal=causal, window=window)
     return jnp.moveaxis(out, 2, 1)
+
+
+def gather_pages(pool, page_table):
+    """Dense view of a paged pool: (num_pages, page_size, K, hd) gathered
+    through a (B, n_pages) page table → (B, n_pages·page_size, K, hd).
+    Row ``j·page_size + r`` of slot b is row r of physical page
+    ``page_table[b, j]`` — the layout the page allocator maintains."""
+    B, n_pages = page_table.shape
+    _, page_size, K, hd = pool.shape
+    dense = jnp.take(pool, page_table.reshape(-1), axis=0)
+    return dense.reshape(B, n_pages * page_size, K, hd)
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, kv_len, *,
+                        page_size: int):
+    """Dense oracle for the paged decode-attention kernel: gather each
+    slot's pages into a contiguous cache and run the model-level SDPA
+    oracle with per-slot valid-length masking.  q: (B, K, G, hd) grouped
+    single-token queries (the kernel's layout); returns (B, K, G, hd).
+
+    This is also the op sequence the serving engine's ``attn_impl="ref"``
+    path executes — the engine-vs-dense divergence gate compares two
+    runs of these exact ops (paged gather vs contiguous cache), so it
+    asserts EXACT equality (DESIGN §10)."""
+    B, K, G, hd = q.shape
+    assert k_pool.shape[1] == page_size, (k_pool.shape, page_size)
+    k = gather_pages(k_pool, page_table)
+    v = gather_pages(v_pool, page_table)
+    out = sdpa_ref(q.reshape(B, 1, K * G, hd), k, v, causal=False,
+                   kv_len=kv_len)
+    return out.reshape(B, K, G, hd)

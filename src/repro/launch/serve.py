@@ -1,11 +1,19 @@
-"""Serving launcher: batched prefill + greedy decode.
+"""Serving launcher: batched prefill + greedy decode, or the
+continuous-batching engine (DESIGN §10).
 
+  # dense reference path (seed behavior)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \
       --batch 4 --prompt-len 32 --new-tokens 16 [--window 16]
+
+  # continuous batching over the paged KV cache
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \
+      --continuous-batching --max-slots 8 --page-size 8 --requests 16 \
+      [--rate 50] [--window 16] [--ckpt consensus.npz]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -25,11 +33,60 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--window", type=int, default=0,
                     help="sliding-window KV cache size (0 = full)")
+    ap.add_argument("--ckpt", default=None,
+                    help="consensus-exported params .npz "
+                         "(train.checkpoint.export_consensus)")
+    # continuous-batching engine (DESIGN §10)
+    ap.add_argument("--continuous-batching", action="store_true",
+                    help="serve a Poisson request trace through the paged "
+                         "continuous-batching engine instead of one fixed "
+                         "batch")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="KV page rows (multiple of 8)")
+    ap.add_argument("--max-slots", type=int, default=8,
+                    help="concurrent decode slots")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="requests in the Poisson trace")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--attn-impl", choices=("ref", "pallas"), default="ref")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg, decode_window=args.window)
-    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt:
+        from repro.train import checkpoint
+        like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params = jax.tree.map(jnp.asarray,
+                              checkpoint.load_consensus(args.ckpt, like))
+        print(f"loaded consensus params from {args.ckpt}")
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+
+    if args.continuous_batching:
+        from repro.serve import (ContinuousBatchingEngine, PagedCacheConfig,
+                                 poisson_load)
+        max_prompt, max_new = 32, 32
+        ctx = args.window or max_prompt + max_new
+        pcfg = PagedCacheConfig(
+            page_size=args.page_size,
+            num_pages=1 + args.max_slots * (-(-ctx // args.page_size)),
+            max_slots=args.max_slots, max_context=ctx, window=args.window)
+        eng = ContinuousBatchingEngine(model, params, pcfg,
+                                       attn_impl=args.attn_impl)
+        reqs = poisson_load(args.requests, args.rate, vocab=cfg.vocab_size,
+                            prompt_buckets=(max_prompt // 2, max_prompt),
+                            new_token_buckets=(4, 8, 16, max_new), seed=1)
+        metrics = eng.run(reqs)
+        print(f"arch={cfg.name} engine=continuous slots={args.max_slots} "
+              f"page={args.page_size} window={args.window or 'full'} "
+              f"attn={args.attn_impl}")
+        print("serve metrics: " + json.dumps(metrics))
+        print(f"generated {metrics['tokens']} tokens over "
+              f"{metrics['requests']} requests "
+              f"({metrics['tokens_per_s']} tok/s)")
+        return
+
     batch = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size)}

@@ -30,6 +30,10 @@ class Model:
     init_cache: Callable              # (batch, length) -> caches
     param_specs: Callable             # () -> pytree of PartitionSpec
     cache_specs: Callable             # () -> pytree of PartitionSpec
+    decode_window: int = 0            # sliding-window size baked at build time
+    # (params, pools, token, positions, page_table, kv_len, attn_fn=None)
+    # -> (logits, pools); None for families without a paged decode path
+    decode_step_paged: Optional[Callable] = None
 
 
 def _frontend_tokens(cfg: ModelConfig) -> int:
@@ -61,7 +65,8 @@ def build_model(cfg: ModelConfig, decode_window: int = 0,
         return Model(cfg, lambda k: ed.init_encdec(cfg, k), loss, prefill,
                      decode_step, init_cache,
                      lambda: ed.encdec_param_specs(cfg),
-                     lambda: ed.encdec_cache_specs(cfg))
+                     lambda: ed.encdec_cache_specs(cfg),
+                     decode_window=decode_window)
 
     nf = _frontend_tokens(cfg)
 
@@ -81,10 +86,19 @@ def build_model(cfg: ModelConfig, decode_window: int = 0,
     def init_cache(batch, length):
         return tf.init_lm_cache(cfg, batch, length)
 
+    def decode_step_paged(params, pools, token, positions, page_table,
+                          kv_len, attn_fn=None):
+        return tf.lm_decode_step_paged(cfg, params, pools, token, positions,
+                                       page_table, kv_len,
+                                       window=decode_window, unroll=unroll,
+                                       attn_fn=attn_fn)
+
     return Model(cfg, lambda k: tf.init_lm(cfg, k), loss, prefill,
                  decode_step, init_cache,
                  lambda: tf.lm_param_specs(cfg),
-                 lambda: tf.lm_cache_specs(cfg))
+                 lambda: tf.lm_cache_specs(cfg),
+                 decode_window=decode_window,
+                 decode_step_paged=decode_step_paged)
 
 
 # ---------------------------------------------------------------------------

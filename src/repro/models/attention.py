@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from .layers import dense_init, rms_norm, rope
 
-__all__ = ["init_attn", "apply_attn", "init_kv_cache", "sdpa_ref"]
+__all__ = ["init_attn", "apply_attn", "apply_attn_paged", "init_kv_cache",
+           "sdpa_ref"]
 
 NEG_INF = -1e30
 
@@ -55,7 +56,9 @@ def sdpa_ref(q, k, v, *, causal: bool, window: int = 0,
 
     q: (B, Sq, H, hd); k, v: (B, Sk, K, hd).  H % K == 0.
     ``q_offset``: absolute position of q[0] (for cached decode).
-    ``kv_len``:   optional dynamic number of valid kv entries (decode).
+    ``kv_len``:   optional dynamic number of valid kv entries (decode);
+                  a scalar, or a ``(B,)`` array for ragged slot batches
+                  (the continuous-batching engine, DESIGN §10).
     """
     B, Sq, H, hd = q.shape
     K = k.shape[2]
@@ -76,9 +79,16 @@ def sdpa_ref(q, k, v, *, causal: bool, window: int = 0,
         mask &= k_pos[None, :] <= q_pos[:, None]
     if window:
         mask &= k_pos[None, :] > q_pos[:, None] - window
-    if kv_len is not None:
-        mask &= k_pos[None, :] < kv_len
-    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    lens = None if kv_len is None else jnp.asarray(kv_len)
+    if lens is not None and lens.ndim == 1:
+        # ragged slot batch: per-slot valid-kv mask (decode-only shapes,
+        # Sq = 1 — the (B, Sq, Sk) mask never rides the training path)
+        bmask = mask[None] & (k_pos[None, None, :] < lens[:, None, None])
+        logits = jnp.where(bmask[:, None, None], logits, NEG_INF)
+    else:
+        if lens is not None:
+            mask &= k_pos[None, :] < lens
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(acc_dt)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vf)
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
@@ -181,3 +191,66 @@ def apply_attn(p, cfg, x, positions, *, mode: str = "train",
     B = h.shape[0]
     y = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
     return resid + y, {"k": k, "v": v}
+
+
+def _gather_pages(pool, page_table):
+    """(num_pages, page_size, K, hd) × (B, n_pages) → dense
+    (B, n_pages·page_size, K, hd) view — the same op sequence as
+    :func:`repro.kernels.ref.gather_pages` (kept local: kernels imports
+    this module for ``sdpa_ref``)."""
+    B, n_pages = page_table.shape
+    _, page_size, K, hd = pool.shape
+    dense = jnp.take(pool, page_table.reshape(-1), axis=0)
+    return dense.reshape(B, n_pages * page_size, K, hd)
+
+
+def apply_attn_paged(p, cfg, x, positions, *, pools, page_table, kv_len,
+                     window: int = 0, attn_fn=None) -> Tuple:
+    """Paged decode attention sub-block (DESIGN §10): one token per slot,
+    KV read/written through a page table instead of a contiguous cache.
+
+    x: (B, 1, d) slot-batched new-token activations; positions: (B, 1)
+    per-slot absolute position of the new token (ragged — unlike
+    :func:`apply_attn`'s uniform decode ``pos``); pools: {"k","v"} page
+    pools ``(num_pages, page_size, K, hd)``; page_table: (B, n_pages)
+    physical-page ids; kv_len: (B,) valid KV rows to attend over
+    *including* the row written here — the scheduler passes 0 for idle
+    slots, whose writes sink to the null page and whose output is junk
+    that the active mask discards.
+
+    ``attn_fn(q, k_pool, v_pool, page_table, kv_len) -> (B, K, G, hd)``
+    selects the attention backend (the Pallas paged kernel); ``None``
+    runs the pure-jnp gather + ``sdpa_ref`` reference — the exact op
+    sequence of :func:`repro.kernels.ref.paged_attention_ref`, which the
+    bit-exact engine-vs-dense gate relies on.
+
+    Returns (y, new_pools).
+    """
+    resid = x
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k_new, v_new = _qkv(p, cfg, h, positions)
+
+    B = x.shape[0]
+    page_size = pools["k"].shape[1]
+    # logical write row: absolute position, folded onto the ring in
+    # window mode (same layout as the dense ring cache: row = pos % win)
+    row = positions[:, 0] % window if window else positions[:, 0]
+    phys = page_table[jnp.arange(B), row // page_size]        # (B,)
+    rin = row % page_size
+    # idle slots (page-table row all NULL) scatter into the null page —
+    # duplicate (0, 0) targets collide only with each other, never with a
+    # live slot's pages (allocator invariant).
+    k_pool = pools["k"].at[phys, rin].set(k_new[:, 0])
+    v_pool = pools["v"].at[phys, rin].set(v_new[:, 0])
+
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    qg = q.reshape(B, K, H // K, hd)
+    if attn_fn is None:
+        k = _gather_pages(k_pool, page_table)
+        v = _gather_pages(v_pool, page_table)
+        out = sdpa_ref(q, k, v, causal=False, kv_len=kv_len)
+    else:
+        out = attn_fn(qg, k_pool, v_pool, page_table, kv_len)
+        out = out.reshape(B, 1, H, hd)
+    y = out.reshape(B, 1, H * hd) @ p["wo"]
+    return resid + y, {"k": k_pool, "v": v_pool}

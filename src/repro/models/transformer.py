@@ -16,14 +16,15 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, block_period, layer_kinds
-from .attention import apply_attn, init_attn, init_kv_cache
+from .attention import apply_attn, apply_attn_paged, init_attn, init_kv_cache
 from .layers import apply_dense_ffn, dense_init, init_dense_ffn, rms_norm
 from .mamba import apply_mamba, init_mamba, init_ssm_cache
 from .moe import apply_moe, init_moe
 
 __all__ = [
-    "init_lm", "lm_loss", "lm_prefill", "lm_decode_step", "init_lm_cache",
-    "lm_param_specs", "lm_cache_specs", "set_seq_parallel_mesh",
+    "init_lm", "lm_loss", "lm_prefill", "lm_decode_step",
+    "lm_decode_step_paged", "init_lm_cache", "lm_param_specs",
+    "lm_cache_specs", "set_seq_parallel_mesh",
 ]
 
 # §Perf lever (Megatron-style sequence parallelism): constrain the residual
@@ -345,3 +346,47 @@ def lm_decode_step(cfg: ModelConfig, params, caches, token, pos, *,
                                    caches=caches, window=window, remat=False,
                                    unroll=unroll)
     return _logits(cfg, params, x), new_caches
+
+
+def lm_decode_step_paged(cfg: ModelConfig, params, pools, token, positions,
+                         page_table, kv_len, *, window: int = 0,
+                         unroll=False, attn_fn=None):
+    """One continuous-batching decode step over the whole slot batch
+    (DESIGN §10).  Unlike :func:`lm_decode_step`, positions are **ragged**:
+    ``positions`` is (B,) int32 — each slot's absolute token position —
+    and ``kv_len`` is (B,) valid KV rows (0 for idle slots).  ``pools`` is
+    the paged-cache tree (tuple over period positions of {"k","v"} pools
+    with leading ``n_blocks``), scanned exactly like dense caches.
+    ``attn_fn`` threads the attention backend down to
+    :func:`~repro.models.attention.apply_attn_paged`.
+    Returns (logits (B, 1, V), new pools)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    B = token.shape[0]
+    pos2 = positions.reshape(B, 1).astype(jnp.int32)
+    period = block_period(cfg)
+    kinds = layer_kinds(cfg)[:period]
+    assert all(mixer == "attn" for mixer, _ in kinds), \
+        "paged decode covers attention mixers only (DESIGN §10 scope note)"
+
+    def body(carry, xs):
+        x, aux = carry
+        block_params, block_pools = xs
+        new_pools = []
+        for pi, (mixer, ffn) in enumerate(kinds):
+            bp = _fsdp_constrain(block_params[pi], pi)
+            x, npools = apply_attn_paged(
+                bp["attn"], cfg, x, pos2, pools=block_pools[pi],
+                page_table=page_table, kv_len=kv_len, window=window,
+                attn_fn=attn_fn)
+            if ffn == "dense":
+                x = apply_dense_ffn(bp["ffn"], x, cfg.norm_eps)
+            elif ffn == "moe":
+                x, a = apply_moe(bp["moe"], cfg, x, cfg.norm_eps)
+                aux = aux + a
+            new_pools.append(npools)
+        return (x, aux), tuple(new_pools)
+
+    (x, _), new_pools = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], pools),
+        unroll=unroll)
+    return _logits(cfg, params, x), new_pools

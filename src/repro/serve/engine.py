@@ -7,6 +7,7 @@ one chip-row's HBM).  ``build_serve_step`` is what the decode dry-run shapes
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -80,27 +81,62 @@ def scale_specs_multipod(spec_tree):
     return jax.tree.map(f, spec_tree, is_leaf=lambda s: isinstance(s, P))
 
 
+@functools.lru_cache(maxsize=64)
+def _jitted_serve_step(model: Model):
+    """One jitted serve_step per Model (frozen dataclass ⇒ hashable):
+    repeated ``greedy_generate`` calls at one shape reuse the compile."""
+    return jax.jit(build_serve_step(model))
+
+
+def grow_caches(model: Model, caches, batch_size: int, target_len: int):
+    """Layout-driven cache growth: pad every prefill-cache leaf out to the
+    shape ``model.init_cache(batch_size, target_len)`` would allocate.
+
+    The target tree is derived with ``jax.eval_shape`` — no allocation —
+    and each leaf is grown along whichever single axis differs, so the
+    sequence axis is located by the model's own cache layout instead of
+    leaf-name matching.  Length-independent leaves (SSM state, conv tails,
+    cross-attention KV, ring-window caches already at ``window``) come
+    back shape-identical and pass through untouched — they can't be
+    silently mis-grown."""
+    target = jax.eval_shape(lambda: model.init_cache(batch_size, target_len))
+
+    def grow(c, t):
+        cur, want = tuple(c.shape), tuple(t.shape)
+        if cur == want:
+            return c
+        assert len(cur) == len(want), (cur, want)
+        diff = [i for i, (a, b) in enumerate(zip(cur, want)) if a != b]
+        assert len(diff) == 1 and want[diff[0]] > cur[diff[0]], \
+            f"cache leaf {cur} does not grow to {want} along one axis"
+        ax = diff[0]
+        pad = [(0, 0)] * len(cur)
+        pad[ax] = (0, want[ax] - cur[ax])
+        return jnp.pad(c, pad)
+
+    return jax.tree.map(grow, caches, target)
+
+
 def greedy_generate(model: Model, params, batch: Dict[str, Any],
                     n_steps: int) -> jax.Array:
     """End-to-end: prefill the prompt, then greedy-decode n_steps tokens.
-    Returns (B, n_steps) generated ids.  CPU-scale usage (examples/tests)."""
+    Returns (B, n_steps) generated ids.  This is the dense reference path
+    the continuous-batching engine (serve/scheduler.py) is gated against.
+
+    The per-token step is jitted once and the grown cache is preallocated
+    once (:func:`grow_caches`) — no per-step Python dispatch of a freshly
+    traced step, no O(n_steps) ``concatenate`` re-layouts."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     n_front = model.cfg.n_frontend_tokens if model.cfg.family == "vlm" else 0
     logits, caches = model.prefill(params, batch)
 
-    # grow self-attention caches to S + n_steps
+    # grow self-attention caches to hold prompt + generation (ring-window
+    # caches are already terminal-size and pass through)
     L0 = S + n_front
-
-    def grow(path, c):
-        name = path[-1].key if hasattr(path[-1], "key") else ""
-        if name in ("k", "v") and c.ndim >= 4 and c.shape[-3] == L0:
-            pad = jnp.zeros(c.shape[:-3] + (n_steps,) + c.shape[-2:], c.dtype)
-            return jnp.concatenate([c, pad], axis=-3)
-        return c
-
-    caches = jax.tree_util.tree_map_with_path(grow, caches)
-    step = build_serve_step(model)
+    caches = grow_caches(model, caches, B,
+                         model.decode_window or L0 + n_steps)
+    step = _jitted_serve_step(model)
     tok = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)[:, None].astype(jnp.int32)
     out = [tok]
     for i in range(n_steps - 1):

@@ -1,0 +1,344 @@
+"""Continuous-batching decode scheduler over the paged KV cache (DESIGN §10).
+
+The seed serving path is batch-synchronous: every request in a batch decodes
+until the LAST one finishes (head-of-line blocking) and pays KV for the
+longest context (padding).  Here the decode batch is a set of **slots**:
+each jitted ``serve_step`` decodes every live slot in ONE dispatch, finished
+requests release their pages immediately, and arrivals are admitted the
+moment a slot + pages are free — so throughput tracks the *mean* request
+length, not the max.
+
+Division of labor:
+
+* device — ``build_paged_serve_step``: embed → paged-attention block scan →
+  greedy head, for the whole slot batch, jitted once (shapes are static:
+  ``max_slots`` slots, fixed page-table width);
+* host — :class:`ContinuousBatchingEngine`: page allocator bookkeeping,
+  per-request prefill + page scatter on admit, EOS/max-token eviction, and
+  the arrival loop.  Per step it ships two small int32 tables (page table,
+  kv lengths) and syncs one (B, 1) token array — no cache movement.
+
+Prefill runs per request at its EXACT prompt length (a compile per distinct
+length — the load generator draws lengths from a small bucket set to bound
+that).  Right-padding prompts instead would corrupt the ring-cache layout
+(row = position mod window) and the last-position prefill logits.
+
+``poisson_load`` generates open-loop Poisson arrivals with heterogeneous
+prompt/output lengths; ``run_fixed_batch`` is the seed-style baseline the
+benchmark gates the engine against (same step math, batch-synchronous
+scheduling), instrumented per token so p50/p99 latencies are comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from .paged_cache import PageAllocator, PagedCacheConfig, init_paged_pools
+
+__all__ = ["Request", "poisson_load", "build_paged_serve_step",
+           "ContinuousBatchingEngine", "run_fixed_batch", "summarize"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # (S,) int32 prompt ids
+    max_new: int                # generation budget incl. the prefill token
+    arrival: float              # seconds after load start (open loop)
+    eos_id: int = -1            # -1: disabled (random-weight smokes)
+
+
+def poisson_load(n_requests: int, rate: float, *, vocab: int,
+                 prompt_buckets=(16, 32), new_token_buckets=(8, 16, 32, 96),
+                 seed: int = 0, eos_id: int = -1) -> List[Request]:
+    """Open-loop Poisson arrivals (exponential gaps at ``rate`` req/s) with
+    prompt lengths and generation budgets drawn uniformly from small bucket
+    sets — heterogeneous enough to expose head-of-line blocking, bucketed
+    so prefill compiles stay bounded."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        S = int(rng.choice(prompt_buckets))
+        out.append(Request(
+            rid=rid,
+            tokens=rng.integers(0, vocab, (S,)).astype(np.int32),
+            max_new=int(rng.choice(new_token_buckets)),
+            arrival=t, eos_id=eos_id))
+    return out
+
+
+def build_paged_serve_step(model: Model, *, attn_impl: str = "ref",
+                           page_size: Optional[int] = None) -> Callable:
+    """jitted ``step(params, pools, token, positions, page_table, kv_len)``
+    → ``(next_token (B, 1), new_pools)``: one dispatch decodes the whole
+    slot batch through the paged cache (greedy head).
+
+    ``attn_impl``: "ref" is the pure-jnp gather + ``sdpa_ref`` path — the
+    bit-exactness anchor the divergence gate relies on; "pallas" reads the
+    page pool directly through :func:`repro.kernels.ops.paged_attention`
+    (page-table gather in the BlockSpec index map, no dense gather)."""
+    assert model.decode_step_paged is not None, \
+        f"{model.cfg.family}: no paged decode path (attention families only)"
+    if attn_impl == "ref":
+        attn_fn = None
+    else:
+        assert attn_impl == "pallas" and page_size is not None
+        from repro.kernels.ops import paged_attention
+
+        def attn_fn(q, k_pool, v_pool, page_table, kv_len):
+            return paged_attention(q, k_pool, v_pool, page_table, kv_len,
+                                   page_size=page_size)
+
+    def step(params, pools, token, positions, page_table, kv_len):
+        logits, pools = model.decode_step_paged(
+            params, pools, token, positions, page_table, kv_len,
+            attn_fn=attn_fn)
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt.astype(jnp.int32)[:, None], pools
+
+    return jax.jit(step)
+
+
+@dataclasses.dataclass
+class _Live:
+    req: Request
+    slot: int
+    emitted: List[int]
+    t_last: float               # emission time of the latest token
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching: admit on free pages, decode every
+    live slot per dispatch, evict on EOS/max-tokens.
+
+    Greedy decoding on the ``attn_impl="ref"`` backend is **token-exact**
+    vs the dense reference :func:`repro.serve.engine.greedy_generate`:
+    identical q/k/v values flow through the same ``sdpa_ref`` ops, and
+    page-padding columns contribute exactly 0.0 under softmax
+    (``exp(-1e30 − m)`` underflows to 0.0, and adding 0.0 to a float sum
+    is the identity).  Logits agree to float32 rounding — the padded
+    attention width changes XLA's reduction splitting, so the last ulp
+    can wiggle without ever moving the argmax — see ``tests/test_serve.py``.
+    """
+
+    def __init__(self, model: Model, params, pcfg: PagedCacheConfig, *,
+                 attn_impl: str = "ref"):
+        assert model.decode_window == pcfg.window, \
+            (model.decode_window, pcfg.window)
+        self.model, self.params, self.pcfg = model, params, pcfg
+        self.alloc = PageAllocator(pcfg)
+        self.pools = init_paged_pools(model.cfg, pcfg)
+        self._step = build_paged_serve_step(model, attn_impl=attn_impl,
+                                            page_size=pcfg.page_size)
+        self._prefill = jax.jit(model.prefill)
+        self._scatter = jax.jit(self._scatter_impl)
+        self.reset()
+
+    def reset(self) -> None:
+        """Fresh serving state (allocator, slots, metrics) with the jitted
+        step/prefill/scatter callables retained — benchmarks warm up the
+        compiles on a throwaway trace, reset, then measure.  Pools keep
+        stale pages: every page is re-written (prefill scatter / decode
+        write) before ``kv_len`` ever exposes it, so stale rows are
+        unreachable by construction (the masked-tail contract)."""
+        pcfg = self.pcfg
+        self.alloc = PageAllocator(pcfg)
+        if not hasattr(self, "pools"):
+            self.pools = init_paged_pools(self.model.cfg, pcfg)
+        self.tok = np.zeros((pcfg.max_slots, 1), np.int32)
+        self.live: Dict[int, _Live] = {}          # slot -> state
+        self.completed: Dict[int, np.ndarray] = {}  # rid -> generated ids
+        self.latencies: List[float] = []          # per emitted token (s)
+        self.steps = 0
+        self._t0 = time.perf_counter()            # run() resets; absolute
+
+    # -- device helpers -----------------------------------------------------
+
+    @staticmethod
+    def _scatter_impl(pools, caches, pages):
+        """Scatter one request's dense prefill cache into its pages.
+        caches leaf: (n_blocks, 1, L, K, hd); pages: (n_used,) physical
+        ids.  Logical row r lands at row ``r % page_size`` of page
+        ``pages[r // page_size]`` — for ring caches L == window and the
+        rolled prefill layout maps through unchanged."""
+
+        def one(pool, c):
+            n_blocks, _, L, K, hd = c.shape
+            ps = pool.shape[2]
+            n_used = pages.shape[0]
+            rows = jnp.pad(c[:, 0], ((0, 0), (0, n_used * ps - L),
+                                     (0, 0), (0, 0)))
+            rows = rows.reshape(n_blocks, n_used, ps, K, hd)
+            return pool.at[:, pages].set(rows)
+
+        return jax.tree.map(one, pools, caches)
+
+    # -- admission / eviction -----------------------------------------------
+
+    def try_admit(self, req: Request) -> bool:
+        """Prefill + page scatter if a slot and enough pages are free.
+        Emits the request's first token (prefill argmax)."""
+        S = int(req.tokens.shape[0])
+        # rows the slot will hold: prompt + every fed-back token (the
+        # final emitted token is never fed, hence max_new − 1)
+        ctx = S + req.max_new - 1
+        if not self.alloc.can_admit(ctx):
+            return False
+        slot = self.alloc.admit(ctx, S)
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(req.tokens)[None]})
+        n_used = self.alloc.pages_needed(ctx)
+        pages = jnp.asarray(self.alloc.page_table[slot, :n_used])
+        self.pools = self._scatter(self.pools, caches, pages)
+        tok0 = int(jnp.argmax(logits[0, -1].astype(jnp.float32)))
+        now = time.perf_counter()
+        st = _Live(req=req, slot=slot, emitted=[tok0], t_last=now)
+        # TTFT of token #1 (queue wait + prefill), on the absolute clock
+        self.latencies.append(now - (self._t0 + req.arrival))
+        if req.max_new == 1 or tok0 == req.eos_id:
+            self._finish(st)
+        else:
+            self.tok[slot, 0] = tok0
+            self.live[slot] = st
+        return True
+
+    def _finish(self, st: _Live) -> None:
+        self.completed[st.req.rid] = np.asarray(st.emitted, np.int32)
+        self.alloc.release(st.slot)
+        self.tok[st.slot, 0] = 0
+        self.live.pop(st.slot, None)
+
+    # -- decode -------------------------------------------------------------
+
+    def step(self) -> None:
+        """One batched decode dispatch over every live slot."""
+        lens = self.alloc.lengths
+        active = self.alloc.active
+        kv = np.where(active, lens + 1, 0).astype(np.int32)
+        if self.pcfg.window:
+            kv = np.minimum(kv, self.pcfg.window).astype(np.int32)
+        pt, _ = self.alloc.device_tables()
+        nxt, self.pools = self._step(
+            self.params, self.pools, jnp.asarray(self.tok),
+            jnp.asarray(lens), pt, jnp.asarray(kv))
+        nxt = np.asarray(nxt)
+        now = time.perf_counter()
+        self.steps += 1
+        for slot in list(self.live):
+            st = self.live[slot]
+            self.alloc.advance(slot)
+            tok = int(nxt[slot, 0])
+            st.emitted.append(tok)
+            self.latencies.append(now - st.t_last)
+            st.t_last = now
+            if len(st.emitted) >= st.req.max_new or tok == st.req.eos_id:
+                self._finish(st)
+            else:
+                self.tok[slot, 0] = tok
+
+    # -- arrival loop -------------------------------------------------------
+
+    def run(self, requests: List[Request]) -> Dict[str, Any]:
+        """Drive the open-loop arrival trace to completion; returns
+        :func:`summarize`-style metrics."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        self._t0 = time.perf_counter()
+        i = 0
+        while i < len(pending) or self.live:
+            now = time.perf_counter() - self._t0
+            while i < len(pending) and pending[i].arrival <= now:
+                if not self.try_admit(pending[i]):
+                    break                      # no slot/pages — decode first
+                i += 1
+            if self.live:
+                self.step()
+            elif i < len(pending):
+                time.sleep(min(1e-3, max(0.0, pending[i].arrival - now)))
+        wall = time.perf_counter() - self._t0
+        return summarize(self.completed, self.latencies, wall,
+                         steps=self.steps)
+
+
+def summarize(completed: Dict[int, np.ndarray], latencies: List[float],
+              wall: float, *, steps: int) -> Dict[str, Any]:
+    total = int(sum(len(v) for v in completed.values()))
+    lat = np.asarray(latencies) * 1e3
+    return {
+        "requests": len(completed),
+        "tokens": total,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(total / wall, 2) if wall else float("inf"),
+        "steps": steps,
+        "p50_ms": round(float(np.percentile(lat, 50)), 3) if len(lat) else None,
+        "p99_ms": round(float(np.percentile(lat, 99)), 3) if len(lat) else None,
+    }
+
+
+def run_fixed_batch(model: Model, params, requests: List[Request], *,
+                    batch_size: int, prompt_pad: Optional[int] = None
+                    ) -> Dict[str, Any]:
+    """Seed-style batch-synchronous baseline, instrumented per token.
+
+    Requests are chunked in arrival order into fixed batches: every chunk
+    waits for its LAST arrival, prompts pad to one fixed length
+    (``prompt_pad``, default the max prompt in the trace — the one-shape
+    compile a static serving path would pin), and the whole chunk decodes
+    ``max(max_new)`` steps.  Tokens past a request's own budget are
+    decoded-and-discarded — that waste, plus the arrival barrier, is
+    exactly the head-of-line cost continuous batching removes.  Only the
+    requested tokens count toward throughput; latencies are stamped per
+    decode step, so p50/p99 compare like-for-like with the engine."""
+    from .engine import _jitted_serve_step, grow_caches
+
+    if prompt_pad is None:
+        prompt_pad = max(int(r.tokens.shape[0]) for r in requests)
+    step = _jitted_serve_step(model)   # lru-cached: warmup calls carry over
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    completed: Dict[int, np.ndarray] = {}
+    latencies: List[float] = []
+    steps = 0
+    t0 = time.perf_counter()
+    for c0 in range(0, len(reqs), batch_size):
+        chunk = reqs[c0:c0 + batch_size]
+        barrier = max(r.arrival for r in chunk)
+        while time.perf_counter() - t0 < barrier:
+            time.sleep(1e-3)
+        toks = np.zeros((len(chunk), prompt_pad), np.int32)
+        for j, r in enumerate(chunk):
+            toks[j, :r.tokens.shape[0]] = r.tokens
+        n_steps = max(r.max_new for r in chunk)
+        logits, caches = model.prefill(params, {"tokens": jnp.asarray(toks)})
+        caches = grow_caches(model, caches, len(chunk),
+                             model.decode_window or prompt_pad + n_steps)
+        tok = jnp.argmax(logits[:, -1].astype(jnp.float32),
+                         -1)[:, None].astype(jnp.int32)
+        emitted = [np.asarray(tok)[:, 0]]
+        now = time.perf_counter()
+        t_last = [now] * len(chunk)
+        for j, r in enumerate(chunk):
+            latencies.append(now - (t0 + r.arrival))
+        steps += 1
+        for s in range(n_steps - 1):
+            tok, caches = step(params, caches, tok,
+                               jnp.asarray(prompt_pad + s, jnp.int32))
+            tok.block_until_ready()
+            now = time.perf_counter()
+            steps += 1
+            emitted.append(np.asarray(tok)[:, 0])
+            for j, r in enumerate(chunk):
+                if s + 2 <= r.max_new:      # token s+2 is within budget
+                    latencies.append(now - t_last[j])
+                    t_last[j] = now
+        gen = np.stack(emitted, axis=1)      # (chunk, n_steps)
+        for j, r in enumerate(chunk):
+            completed[r.rid] = gen[j, :r.max_new]
+    wall = time.perf_counter() - t0
+    return summarize(completed, latencies, wall, steps=steps)

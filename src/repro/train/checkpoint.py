@@ -23,7 +23,7 @@ import jax
 import numpy as np
 
 __all__ = ["save", "load", "save_state", "load_state", "resize_state",
-           "load_state_resized"]
+           "load_state_resized", "export_consensus", "load_consensus"]
 
 _SEP = "|"
 
@@ -174,6 +174,50 @@ def load_state(path: str, like: Any, layout: Optional[Any] = None) -> Any:
         tree["opt"]["e"] = jax.tree.map(
             lambda l: jnp.zeros(tuple(l.shape), l.dtype), e_like)
     return tree
+
+
+# ---------------------------------------------------------------------------
+# train → serve handoff: consensus export (DESIGN §10)
+# ---------------------------------------------------------------------------
+
+def export_consensus(src_path: str, dst_path: str) -> None:
+    """Export the EDM consensus iterate from a training checkpoint: the
+    per-leaf mean over the leading agent axis of every ``params`` leaf,
+    written as a single-replica params tree (no agent axis, no opt state).
+
+    Why the mean: the gossip matrix W is doubly stochastic, so the agent
+    mean is invariant under mixing and is exactly the consensus target the
+    bias-corrected update drives every agent toward (PAPER.md; Momentum
+    Tracking, arXiv 2209.15505) — x̄ is *the* trained artifact serving
+    should load.
+
+    Why this is sharding-independent: :func:`save` always materializes the
+    logical gathered tree — bus-resident, FSDP-sharded (``agents="pod"``)
+    and tree-resident runs write byte-identical params leaves — so a
+    consensus export from a pod run equals the export from the gathered
+    run, and the serving side re-lays it out under whatever
+    ``serve_param_specs`` mesh it runs on.
+
+    The reduction runs in float64 and rounds once to the stored dtype, so
+    the export is independent of the agent count's summation order."""
+    data = np.load(src_path)
+    prefix = "params" + _SEP
+    out = {}
+    for k in data.files:
+        if not k.startswith(prefix):
+            continue
+        leaf = data[k]
+        out[k[len(prefix):]] = (
+            leaf.mean(axis=0, dtype=np.float64).astype(leaf.dtype))
+    assert out, f"{src_path}: no params leaves to export"
+    os.makedirs(os.path.dirname(dst_path) or ".", exist_ok=True)
+    np.savez(dst_path, **out)
+
+
+def load_consensus(path: str, like_params: Any) -> Any:
+    """Load a consensus export into the structure of ``like_params`` (a
+    single-replica params tree / eval_shape thereof)."""
+    return load(path, like_params)
 
 
 # ---------------------------------------------------------------------------
