@@ -18,10 +18,12 @@ from .edm_update import (BLOCK_ROWS, LANE, edm_update_flat,
                          gossip_axpy_q8_flat)
 from .flash_attention import flash_attention_kernel_call
 from .paged_attention import paged_attention_kernel_call
+from .paged_prefill import paged_prefill_kernel_call
 
 __all__ = ["edm_update", "edm_update_tree", "edm_update_bus",
            "edm_update_bus_ef", "gossip_axpy", "gossip_axpy_wire",
-           "flash_attention", "paged_attention", "padded_size"]
+           "flash_attention", "paged_attention", "paged_prefill_attention",
+           "padded_size"]
 
 
 def _on_tpu() -> bool:
@@ -262,3 +264,36 @@ def paged_attention(q, k_pool, v_pool, page_table, kv_len, *,
     return paged_attention_kernel_call(q, k_pool, v_pool, page_table, kv_len,
                                        page_size=page_size,
                                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "window",
+                                             "interpret"))
+def paged_prefill_attention(q, k_chunk, v_chunk, k_pool, v_pool, pt_row,
+                            chunk_start, chunk_len, *, page_size: int,
+                            window: int = 0, interpret: bool | None = None):
+    """Paged prefill-attention for one chunk of one slot (DESIGN §11).
+
+    Model layout in and out: q (1, C, H, hd) chunk queries, k_chunk /
+    v_chunk (1, C, K, hd) the in-flight chunk's keys/values (not yet
+    scattered into the pool), pools (num_pages, page_size, K, hd),
+    pt_row (n_pages,) the slot's page-table row.  ``chunk_start`` /
+    ``chunk_len`` are traced int32 scalars — NOT part of the jit key, so
+    every chunk of every prompt length reuses one compiled kernel.
+    Oracle: :func:`repro.kernels.ref.paged_prefill_attention_ref`."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    _, C, H, hd = q.shape
+    K = k_chunk.shape[2]
+    G = H // K
+    # (1, C, H, hd) -> (K, C*G, hd), row i*G + g = (token i, group member g)
+    qk = (q.reshape(C, K, G, hd).transpose(1, 0, 2, 3).reshape(K, C * G, hd))
+    kc = k_chunk[0].transpose(1, 0, 2)           # (K, C, hd)
+    vc = v_chunk[0].transpose(1, 0, 2)
+    meta = jnp.stack([jnp.asarray(chunk_start, jnp.int32),
+                      jnp.asarray(chunk_len, jnp.int32)])
+    out = paged_prefill_kernel_call(qk, kc, vc, k_pool, v_pool,
+                                    jnp.asarray(pt_row, jnp.int32), meta,
+                                    page_size=page_size, window=window,
+                                    interpret=interpret)
+    return (out.reshape(K, C, G, hd).transpose(1, 0, 2, 3)
+            .reshape(1, C, H, hd))

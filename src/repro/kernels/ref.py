@@ -3,10 +3,11 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.models.attention import sdpa_ref
+from repro.models.attention import paged_prefill_sdpa, sdpa_ref
 
 __all__ = ["edm_update_ref", "gossip_axpy_ref", "flash_attention_ref",
-           "gather_pages", "paged_attention_ref"]
+           "gather_pages", "paged_attention_ref",
+           "paged_prefill_attention_ref"]
 
 
 def edm_update_ref(x, g, m, psi, *, alpha: float, beta: float):
@@ -61,3 +62,19 @@ def paged_attention_ref(q, k_pool, v_pool, page_table, kv_len, *,
     out = sdpa_ref(q.reshape(B, 1, K * G, hd), k, v, causal=False,
                    kv_len=kv_len)
     return out.reshape(B, K, G, hd)
+
+
+def paged_prefill_attention_ref(q, k_chunk, v_chunk, k_pool, v_pool, pt_row,
+                                chunk_start, chunk_len, *, window: int = 0):
+    """Dense oracle for the paged prefill-attention kernel (DESIGN §11):
+    gather the slot's pages, concatenate the in-flight chunk's dense
+    keys/values, and run the positional SDPA oracle with ring-aware
+    key positions and per-element window masking.  q: (1, C, H, hd)
+    model-layout chunk queries; k_chunk, v_chunk: (1, C, K, hd);
+    pt_row: (n_pages,); returns (1, C, H, hd).
+
+    This is also the op sequence ``attn_impl="ref"`` executes inside the
+    chunked serving engine (:func:`repro.models.attention.paged_prefill_sdpa`
+    — same function), so the engine-vs-oracle gate is exact equality."""
+    return paged_prefill_sdpa(q, k_chunk, v_chunk, k_pool, v_pool, pt_row,
+                              chunk_start, chunk_len, window=window)

@@ -9,6 +9,11 @@ continuous-batching engine (DESIGN §10).
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \
       --continuous-batching --max-slots 8 --page-size 8 --requests 16 \
       [--rate 50] [--window 16] [--ckpt consensus.npz]
+
+  # chunked prefill fused into the decode dispatch (DESIGN §11)
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --smoke \
+      --continuous-batching --prefill-chunk 8 --max-step-tokens 16 \
+      --prompt-dist exact --max-slots 8 --page-size 8 --requests 16
 """
 from __future__ import annotations
 
@@ -50,6 +55,18 @@ def main():
     ap.add_argument("--rate", type=float, default=50.0,
                     help="Poisson arrival rate (req/s)")
     ap.add_argument("--attn-impl", choices=("ref", "pallas"), default="ref")
+    # chunked prefill (DESIGN §11)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: fixed chunk width in tokens "
+                         "(None = legacy per-request exact-length prefill)")
+    ap.add_argument("--max-step-tokens", type=int, default=None,
+                    help="per-dispatch token budget (chunk + live decodes); "
+                         "None = uncapped")
+    ap.add_argument("--prompt-dist", choices=("bucket", "exact"),
+                    default="bucket",
+                    help="prompt-length draw: 'bucket' keeps compiles "
+                         "bounded for the legacy path, 'exact' is a length "
+                         "continuum (chunked path serves it compile-free)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -73,14 +90,20 @@ def main():
             num_pages=1 + args.max_slots * (-(-ctx // args.page_size)),
             max_slots=args.max_slots, max_context=ctx, window=args.window)
         eng = ContinuousBatchingEngine(model, params, pcfg,
-                                       attn_impl=args.attn_impl)
+                                       attn_impl=args.attn_impl,
+                                       prefill_chunk=args.prefill_chunk,
+                                       max_step_tokens=args.max_step_tokens)
         reqs = poisson_load(args.requests, args.rate, vocab=cfg.vocab_size,
                             prompt_buckets=(max_prompt // 2, max_prompt),
-                            new_token_buckets=(4, 8, 16, max_new), seed=1)
+                            new_token_buckets=(4, 8, 16, max_new),
+                            prompt_dist=args.prompt_dist, seed=1)
         metrics = eng.run(reqs)
+        pf = (f"chunked(C={args.prefill_chunk})"
+              if args.prefill_chunk else "per-request")
         print(f"arch={cfg.name} engine=continuous slots={args.max_slots} "
               f"page={args.page_size} window={args.window or 'full'} "
-              f"attn={args.attn_impl}")
+              f"attn={args.attn_impl} prefill={pf} "
+              f"compiles={metrics['compile_count']}")
         print("serve metrics: " + json.dumps(metrics))
         print(f"generated {metrics['tokens']} tokens over "
               f"{metrics['requests']} requests "

@@ -34,6 +34,13 @@ class Model:
     # (params, pools, token, positions, page_table, kv_len, attn_fn=None)
     # -> (logits, pools); None for families without a paged decode path
     decode_step_paged: Optional[Callable] = None
+    # (params, pools, tokens, pt_row, chunk_start, chunk_len, attn_fn=None)
+    # -> (chunk logits, pools); one prompt chunk of one slot (DESIGN §11)
+    prefill_chunk_paged: Optional[Callable] = None
+    # (params, pools, token, positions, page_table, kv_len, chunk_tokens,
+    #  pt_row, chunk_start, chunk_len, attn_fn=None, prefill_attn_fn=None)
+    # -> (decode logits, chunk logits, pools); the fused mixed serving step
+    decode_step_mixed: Optional[Callable] = None
 
 
 def _frontend_tokens(cfg: ModelConfig) -> int:
@@ -93,12 +100,31 @@ def build_model(cfg: ModelConfig, decode_window: int = 0,
                                        window=decode_window, unroll=unroll,
                                        attn_fn=attn_fn)
 
+    def prefill_chunk_paged(params, pools, tokens, pt_row, chunk_start,
+                            chunk_len, attn_fn=None):
+        return tf.lm_prefill_chunk_paged(cfg, params, pools, tokens, pt_row,
+                                         chunk_start, chunk_len,
+                                         window=decode_window, unroll=unroll,
+                                         attn_fn=attn_fn)
+
+    def decode_step_mixed(params, pools, token, positions, page_table,
+                          kv_len, chunk_tokens, pt_row, chunk_start,
+                          chunk_len, attn_fn=None, prefill_attn_fn=None):
+        return tf.lm_serve_step_mixed(cfg, params, pools, token, positions,
+                                      page_table, kv_len, chunk_tokens,
+                                      pt_row, chunk_start, chunk_len,
+                                      window=decode_window, unroll=unroll,
+                                      attn_fn=attn_fn,
+                                      prefill_attn_fn=prefill_attn_fn)
+
     return Model(cfg, lambda k: tf.init_lm(cfg, k), loss, prefill,
                  decode_step, init_cache,
                  lambda: tf.lm_param_specs(cfg),
                  lambda: tf.lm_cache_specs(cfg),
                  decode_window=decode_window,
-                 decode_step_paged=decode_step_paged)
+                 decode_step_paged=decode_step_paged,
+                 prefill_chunk_paged=prefill_chunk_paged,
+                 decode_step_mixed=decode_step_mixed)
 
 
 # ---------------------------------------------------------------------------

@@ -13,8 +13,9 @@ import jax.numpy as jnp
 
 from .layers import dense_init, rms_norm, rope
 
-__all__ = ["init_attn", "apply_attn", "apply_attn_paged", "init_kv_cache",
-           "sdpa_ref"]
+__all__ = ["init_attn", "apply_attn", "apply_attn_paged",
+           "apply_attn_paged_prefill", "init_kv_cache", "sdpa_ref",
+           "sdpa_pos_ref", "prev_page_positions", "paged_prefill_sdpa"]
 
 NEG_INF = -1e30
 
@@ -92,6 +93,93 @@ def sdpa_ref(q, k, v, *, causal: bool, window: int = 0,
     probs = jax.nn.softmax(logits, axis=-1).astype(acc_dt)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vf)
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def sdpa_pos_ref(q, k, v, *, q_pos, k_pos, k_valid, window: int = 0):
+    """GQA SDPA with EXPLICIT per-row key positions and validity — the
+    chunked-prefill reference (DESIGN §11), where the key rows are a mix
+    of ring/linear page rows and the in-flight chunk so neither positions
+    nor validity are derivable from row indices.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, K, hd); q_pos: (Sq,) absolute query
+    positions; k_pos: (Sk,) absolute key positions; k_valid: (Sk,) bool.
+    Masking: valid ∧ causal (k_pos ≤ q_pos) ∧ window (k_pos > q_pos − w).
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Sq, K, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qf * scale,
+                        k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    mask = k_valid[None, :] & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def prev_page_positions(n_rows, chunk_start, window: int = 0):
+    """(positions, valid) of the previously-filled page rows a prefill
+    chunk starting at absolute position ``chunk_start`` attends to.
+
+    Linear (``window == 0``): row r holds position r, valid iff
+    r < chunk_start.  Ring: row r holds the LATEST position p < chunk_start
+    with p ≡ r (mod window) — ``(chunk_start−1) − ((chunk_start−1−r) mod
+    window)`` — valid iff that position exists (p ≥ 0); the occupied rows
+    are exactly the prefix [0, min(chunk_start, window))."""
+    r = jnp.arange(n_rows, dtype=jnp.int32)
+    start = jnp.asarray(chunk_start, jnp.int32)
+    if window:
+        pos = (start - 1) - jnp.mod(start - 1 - r, window)
+        # rows past the ring (NULL page-table entries) alias in-window
+        # positions through the mod — only the ring's own rows are real
+        valid = (pos >= 0) & (pos < start) & (r < window)
+    else:
+        pos = r
+        valid = (pos >= 0) & (pos < start)
+    return pos, valid
+
+
+def paged_prefill_sdpa(q, k_chunk, v_chunk, k_pool, v_pool, pt_row,
+                       chunk_start, chunk_len, *, window: int = 0):
+    """Pure-jnp chunked-prefill attention (DESIGN §11): chunk queries
+    attend causally to every previously-filled page row of ONE slot
+    (gathered through its page-table row) plus the in-flight chunk's own
+    keys — the chunk K/V ride alongside rather than through the pool, so
+    ring rows the chunk is about to overwrite are still read at their
+    pre-chunk values.
+
+    q: (1, C, H, hd); k_chunk, v_chunk: (1, C, K, hd); k_pool, v_pool:
+    (num_pages, page_size, K, hd); pt_row: (n_pages,) physical page ids;
+    chunk_start: absolute position of q[0]; chunk_len: valid chunk rows
+    (the last chunk is padded — rows ≥ chunk_len are masked everywhere).
+
+    This is both the ``attn_impl="ref"`` op sequence and (via
+    :func:`repro.kernels.ref.paged_prefill_attention_ref`) the oracle the
+    Pallas paged-prefill kernel is tested against."""
+    C = q.shape[1]
+    k_prev = _gather_pages(k_pool, pt_row[None])      # (1, R, K, hd)
+    v_prev = _gather_pages(v_pool, pt_row[None])
+    kpos_prev, valid_prev = prev_page_positions(k_prev.shape[1],
+                                                chunk_start, window)
+    # sanitize never-written rows: masked logits already exclude them, but
+    # 0·NaN = NaN in the value matmul would leak pool poison (DESIGN §10)
+    dead = ~valid_prev[None, :, None, None]
+    k_prev = jnp.where(dead, 0.0, k_prev).astype(k_prev.dtype)
+    v_prev = jnp.where(dead, 0.0, v_prev).astype(v_prev.dtype)
+    qpos = (jnp.asarray(chunk_start, jnp.int32)
+            + jnp.arange(C, dtype=jnp.int32))
+    k_all = jnp.concatenate([k_prev, k_chunk], axis=1)
+    v_all = jnp.concatenate([v_prev, v_chunk], axis=1)
+    k_pos = jnp.concatenate([kpos_prev, qpos])
+    k_valid = jnp.concatenate(
+        [valid_prev, jnp.arange(C) < jnp.asarray(chunk_len, jnp.int32)])
+    return sdpa_pos_ref(q, k_all, v_all, q_pos=qpos, k_pos=k_pos,
+                        k_valid=k_valid, window=window)
 
 
 def _qkv(p, cfg, x, positions):
@@ -253,4 +341,56 @@ def apply_attn_paged(p, cfg, x, positions, *, pools, page_table, kv_len,
         out = attn_fn(qg, k_pool, v_pool, page_table, kv_len)
         out = out.reshape(B, 1, H, hd)
     y = out.reshape(B, 1, H * hd) @ p["wo"]
+    return resid + y, {"k": k_pool, "v": v_pool}
+
+
+def apply_attn_paged_prefill(p, cfg, x, *, pools, pt_row, chunk_start,
+                             chunk_len, window: int = 0,
+                             attn_fn=None) -> Tuple:
+    """Chunked-prefill attention sub-block (DESIGN §11): one fixed-size
+    chunk of ONE slot's prompt, attending over that slot's
+    previously-filled pages plus itself, then scattered into the pages.
+
+    x: (1, C, d) chunk activations (C is the STATIC chunk width — the
+    whole serving trace compiles this shape once); pt_row: (n_pages,)
+    the slot's page-table row; chunk_start: absolute position of x[:, 0]
+    (the slot's prefill cursor); chunk_len: traced valid-token count —
+    the last chunk of a prompt is padded, and padded rows are masked out
+    of the attention AND their page writes sink to the null page.
+
+    Attention runs BEFORE the write: in ring mode a chunk's rows alias
+    ring rows that still hold live pre-chunk keys (position p − window is
+    in-window for early chunk queries), so write-then-attend would read
+    the overwritten values.  ``attn_fn(q, k_chunk, v_chunk, k_pool,
+    v_pool, pt_row, chunk_start, chunk_len) -> (1, C, H, hd)`` selects
+    the Pallas paged-prefill kernel; ``None`` runs
+    :func:`paged_prefill_sdpa` — the oracle's exact op sequence.
+
+    Returns (y (1, C, d), new_pools).
+    """
+    resid = x
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    C = x.shape[1]
+    qpos = (jnp.asarray(chunk_start, jnp.int32)
+            + jnp.arange(C, dtype=jnp.int32))
+    q, k_new, v_new = _qkv(p, cfg, h, qpos[None])
+    if attn_fn is None:
+        out = paged_prefill_sdpa(q, k_new, v_new, pools["k"], pools["v"],
+                                 pt_row, chunk_start, chunk_len,
+                                 window=window)
+    else:
+        out = attn_fn(q, k_new, v_new, pools["k"], pools["v"], pt_row,
+                      chunk_start, chunk_len)
+    # scatter the chunk's VALID rows into the slot's pages; padded rows
+    # redirect to physical page 0 (the null write sink — same idiom as
+    # idle decode slots, see apply_attn_paged).  Ring rows are distinct
+    # within one chunk because the engine enforces C <= window.
+    page_size = pools["k"].shape[1]
+    row = jnp.mod(qpos, window) if window else qpos
+    live = jnp.arange(C) < jnp.asarray(chunk_len, jnp.int32)
+    phys = jnp.where(live, pt_row[row // page_size], 0)
+    rin = row % page_size
+    k_pool = pools["k"].at[phys, rin].set(k_new[0])
+    v_pool = pools["v"].at[phys, rin].set(v_new[0])
+    y = out.reshape(1, C, cfg.n_heads * cfg.hd) @ p["wo"]
     return resid + y, {"k": k_pool, "v": v_pool}

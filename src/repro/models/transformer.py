@@ -16,15 +16,17 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, block_period, layer_kinds
-from .attention import apply_attn, apply_attn_paged, init_attn, init_kv_cache
+from .attention import (apply_attn, apply_attn_paged,
+                        apply_attn_paged_prefill, init_attn, init_kv_cache)
 from .layers import apply_dense_ffn, dense_init, init_dense_ffn, rms_norm
 from .mamba import apply_mamba, init_mamba, init_ssm_cache
 from .moe import apply_moe, init_moe
 
 __all__ = [
     "init_lm", "lm_loss", "lm_prefill", "lm_decode_step",
-    "lm_decode_step_paged", "init_lm_cache", "lm_param_specs",
-    "lm_cache_specs", "set_seq_parallel_mesh",
+    "lm_decode_step_paged", "lm_prefill_chunk_paged", "lm_serve_step_mixed",
+    "init_lm_cache", "lm_param_specs", "lm_cache_specs",
+    "set_seq_parallel_mesh",
 ]
 
 # §Perf lever (Megatron-style sequence parallelism): constrain the residual
@@ -390,3 +392,108 @@ def lm_decode_step_paged(cfg: ModelConfig, params, pools, token, positions,
         body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], pools),
         unroll=unroll)
     return _logits(cfg, params, x), new_pools
+
+
+def _check_attn_only(cfg):
+    kinds = layer_kinds(cfg)[:block_period(cfg)]
+    assert all(mixer == "attn" for mixer, _ in kinds), \
+        "paged serving covers attention mixers only (DESIGN §10 scope note)"
+    return kinds
+
+
+def lm_prefill_chunk_paged(cfg: ModelConfig, params, pools, tokens, pt_row,
+                           chunk_start, chunk_len, *, window: int = 0,
+                           unroll=False, attn_fn=None):
+    """One chunked-prefill step for ONE slot (DESIGN §11): run a fixed-size
+    chunk of the slot's prompt through the stack, attending to the slot's
+    previously-filled pages, and scatter the chunk's K/V into its pages.
+
+    tokens: (1, C) int32 — the chunk, padded to the static width C;
+    pt_row: (n_pages,) the slot's page-table row; chunk_start / chunk_len:
+    traced int32 scalars (cursor and valid-token count).  ``attn_fn``
+    selects the Pallas paged-prefill kernel (see
+    :func:`~repro.models.attention.apply_attn_paged_prefill`).
+    Returns (logits (1, C, V), new pools) — logits rows ≥ chunk_len are
+    padding garbage the caller must ignore."""
+    kinds = _check_attn_only(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(carry, xs):
+        x, aux = carry
+        block_params, block_pools = xs
+        new_pools = []
+        for pi, (mixer, ffn) in enumerate(kinds):
+            bp = _fsdp_constrain(block_params[pi], pi)
+            x, npools = apply_attn_paged_prefill(
+                bp["attn"], cfg, x, pools=block_pools[pi], pt_row=pt_row,
+                chunk_start=chunk_start, chunk_len=chunk_len, window=window,
+                attn_fn=attn_fn)
+            if ffn == "dense":
+                x = apply_dense_ffn(bp["ffn"], x, cfg.norm_eps)
+            elif ffn == "moe":
+                x, a = apply_moe(bp["moe"], cfg, x, cfg.norm_eps)
+                aux = aux + a
+            new_pools.append(npools)
+        return (x, aux), tuple(new_pools)
+
+    (x, _), new_pools = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], pools),
+        unroll=unroll)
+    return _logits(cfg, params, x), new_pools
+
+
+def lm_serve_step_mixed(cfg: ModelConfig, params, pools, token, positions,
+                        page_table, kv_len, chunk_tokens, pt_row,
+                        chunk_start, chunk_len, *, window: int = 0,
+                        unroll=False, attn_fn=None, prefill_attn_fn=None):
+    """The fused mixed-work serving step (DESIGN §11): every live decode
+    slot advances one token AND one prefill chunk of one mid-prefill slot
+    runs, inside a SINGLE weight scan — the chunk piggybacks on the
+    weights the decode batch already pulled through VMEM, which is the
+    whole point of chunked prefill (no separate prompt pass, no
+    head-of-line blocking).
+
+    Decode inputs are exactly :func:`lm_decode_step_paged`'s (the engine
+    masks mid-prefill slots out of ``page_table``/``kv_len`` — their ring
+    rows are live); chunk inputs are exactly
+    :func:`lm_prefill_chunk_paged`'s.  Within a layer the decode batch
+    runs first, then the chunk — their page writes are disjoint (the
+    chunk's slot is masked out of the decode dispatch, so its decode-side
+    write sinks to the null page).
+
+    Returns (decode logits (B, 1, V), chunk logits (1, C, V), new pools).
+    """
+    kinds = _check_attn_only(cfg)
+    xd = jnp.take(params["embed"], token, axis=0)
+    xc = jnp.take(params["embed"], chunk_tokens, axis=0)
+    B = token.shape[0]
+    pos2 = positions.reshape(B, 1).astype(jnp.int32)
+
+    def body(carry, xs):
+        xd, xc, aux = carry
+        block_params, block_pools = xs
+        new_pools = []
+        for pi, (mixer, ffn) in enumerate(kinds):
+            bp = _fsdp_constrain(block_params[pi], pi)
+            xd, npools = apply_attn_paged(
+                bp["attn"], cfg, xd, pos2, pools=block_pools[pi],
+                page_table=page_table, kv_len=kv_len, window=window,
+                attn_fn=attn_fn)
+            xc, npools = apply_attn_paged_prefill(
+                bp["attn"], cfg, xc, pools=npools, pt_row=pt_row,
+                chunk_start=chunk_start, chunk_len=chunk_len, window=window,
+                attn_fn=prefill_attn_fn)
+            if ffn == "dense":
+                xd = apply_dense_ffn(bp["ffn"], xd, cfg.norm_eps)
+                xc = apply_dense_ffn(bp["ffn"], xc, cfg.norm_eps)
+            elif ffn == "moe":
+                xd, ad = apply_moe(bp["moe"], cfg, xd, cfg.norm_eps)
+                xc, ac = apply_moe(bp["moe"], cfg, xc, cfg.norm_eps)
+                aux = aux + ad + ac
+            new_pools.append(npools)
+        return (xd, xc, aux), tuple(new_pools)
+
+    (xd, xc, _), new_pools = jax.lax.scan(
+        body, (xd, xc, jnp.zeros((), jnp.float32)),
+        (params["blocks"], pools), unroll=unroll)
+    return _logits(cfg, params, xd), _logits(cfg, params, xc), new_pools

@@ -143,7 +143,12 @@ class PageAllocator:
     * physical page ``NULL_PAGE`` is never allocated;
     * a live slot's pages are disjoint from every other live slot's;
     * free slots' page-table rows are all-``NULL_PAGE`` and their length
-      is 0 (their decode writes sink into the null page).
+      is 0 (their decode writes sink into the null page);
+    * chunked-prefill slots (DESIGN §11): ``prefill_cursor`` counts prompt
+      rows already written, ``lengths == prefill_cursor`` while
+      ``prefilling`` and ``prefill_cursor <= prompt_len`` always — all
+      pages are reserved at admission, so a mid-prefill slot can never
+      OOM and its pages never move.
     """
 
     def __init__(self, pcfg: PagedCacheConfig):
@@ -154,6 +159,10 @@ class PageAllocator:
                                    np.int32)
         self.lengths = np.zeros((pcfg.max_slots,), np.int32)
         self.active = np.zeros((pcfg.max_slots,), bool)
+        # chunked-prefill slot state (DESIGN §11)
+        self.prompt_len = np.zeros((pcfg.max_slots,), np.int32)
+        self.prefill_cursor = np.zeros((pcfg.max_slots,), np.int32)
+        self.prefilling = np.zeros((pcfg.max_slots,), bool)
 
     # -- capacity queries ---------------------------------------------------
 
@@ -179,12 +188,20 @@ class PageAllocator:
 
     # -- admit / advance / release -----------------------------------------
 
-    def admit(self, context_len: int, prompt_len: int) -> int:
+    def admit(self, context_len: int, prompt_len: int, *,
+              chunked: bool = False) -> int:
         """Reserve a slot + pages for a request whose total context will
         reach ``context_len`` rows (prompt + worst-case generation, capped
         by the ring in window mode).  All pages are reserved up front —
-        no mid-decode allocation, so an admitted request can never OOM.
-        Returns the slot id."""
+        no mid-decode allocation, so an admitted request can never OOM
+        (and a ``chunked`` admission can never OOM *mid-prefill*).
+        Returns the slot id.
+
+        ``chunked=True`` admits for chunked prefill (DESIGN §11): the slot
+        starts with ZERO written rows (``lengths = 0``) and a prefill
+        cursor that :meth:`advance_prefill` walks to ``prompt_len`` one
+        chunk at a time; ``chunked=False`` is the per-request-prefill
+        path, where all ``prompt_len`` rows are scattered on admission."""
         assert context_len >= prompt_len > 0, (context_len, prompt_len)
         assert self.cfg.window or context_len <= self.cfg.max_context, \
             (context_len, self.cfg.max_context)
@@ -197,7 +214,10 @@ class PageAllocator:
         row = np.full((self.cfg.pages_per_slot,), NULL_PAGE, np.int32)
         row[:n] = pages
         self.page_table[slot] = row
-        self.lengths[slot] = prompt_len
+        self.prompt_len[slot] = prompt_len
+        self.prefill_cursor[slot] = 0 if chunked else prompt_len
+        self.prefilling[slot] = chunked
+        self.lengths[slot] = 0 if chunked else prompt_len
         self.active[slot] = True
         return slot
 
@@ -209,9 +229,27 @@ class PageAllocator:
         ``length % window`` and RoPE needs the absolute position; the
         number of *valid* KV rows is ``min(length, window)``."""
         assert self.active[slot], slot
+        assert not self.prefilling[slot], \
+            f"decode advance on mid-prefill slot {slot}"
         self.lengths[slot] = int(self.lengths[slot]) + n
         assert self.cfg.window or self.lengths[slot] <= self.cfg.max_context, \
             (slot, int(self.lengths[slot]), self.cfg.max_context)
+
+    def advance_prefill(self, slot: int, n: int) -> None:
+        """Account ``n`` prompt rows written by a prefill chunk
+        (DESIGN §11).  Keeps ``lengths == prefill_cursor`` so the decode
+        dispatch's write position and RoPE base stay consistent with the
+        pages actually filled; the slot leaves ``prefilling`` exactly when
+        the cursor reaches the TRUE prompt length."""
+        assert self.active[slot] and self.prefilling[slot], slot
+        assert n >= 1, n
+        cur = int(self.prefill_cursor[slot]) + n
+        assert cur <= self.prompt_len[slot], \
+            (slot, cur, int(self.prompt_len[slot]))
+        self.prefill_cursor[slot] = cur
+        self.lengths[slot] = cur
+        if cur == self.prompt_len[slot]:
+            self.prefilling[slot] = False
 
     def release(self, slot: int) -> None:
         """Evict: return the slot's pages to the free list and zero its
@@ -223,6 +261,9 @@ class PageAllocator:
                 self.free_pages.append(int(p))
         self.page_table[slot] = NULL_PAGE
         self.lengths[slot] = 0
+        self.prompt_len[slot] = 0
+        self.prefill_cursor[slot] = 0
+        self.prefilling[slot] = False
         self.active[slot] = False
         self.free_slots.append(slot)
 
@@ -231,3 +272,15 @@ class PageAllocator:
     def device_tables(self) -> Tuple[jax.Array, jax.Array]:
         """(page_table, lengths) as device arrays for this decode step."""
         return jnp.asarray(self.page_table), jnp.asarray(self.lengths)
+
+    def decode_tables(self) -> Tuple[jax.Array, jax.Array]:
+        """(page_table, lengths) for the DECODE half of a mixed dispatch
+        (DESIGN §11): mid-prefill slots' page-table rows are masked to the
+        null page, so their (junk) decode write sinks harmlessly instead
+        of corrupting a page the next prefill chunk will read — in ring
+        mode the decode write row ``length % window`` aliases a LIVE ring
+        row once the ring is full, so the mask is load-bearing, not just
+        hygiene."""
+        pt = self.page_table.copy()
+        pt[self.prefilling] = NULL_PAGE
+        return jnp.asarray(pt), jnp.asarray(self.lengths)
