@@ -53,7 +53,16 @@ Three parts:
   gates; plus the modeled n=32 byte cut (bf16 ≥ 2×, int8 ≥ 3.5× at an
   unchanged permute count) and the §E.1/§E.2 error-feedback divergence
   gates with naive-quantization negative-control rows.  Results land in
-  ``BENCH_wire.json``.
+  ``BENCH_wire.json``;
+* a **policy-group** sweep (``--groups``, DESIGN §12): per
+  ``--gossip-groups`` config (ungrouped baseline, 2-group all-gossip,
+  expert opt-out, expert slow-cycle) on the smoke MoE transformer —
+  group-mixer us/step and the modeled per-group wire bytes over an
+  8-step window, behind the segment-composition gates (2-group
+  all-gossip == whole-bus mixer bit-exactly; opt-out expert rows come
+  back untouched) and the byte-accounting gates (opt-out strictly under
+  the baseline; all-gossip − opt-out delta == the experts group's
+  modeled bytes exactly).  Results land in ``BENCH_groups.json``.
 
 CLI::
 
@@ -63,6 +72,7 @@ CLI::
     python -m benchmarks.gossip_micro --autotune-block-rows
     python -m benchmarks.gossip_micro --sharded
     python -m benchmarks.gossip_micro --wire
+    python -m benchmarks.gossip_micro --groups
 """
 from __future__ import annotations
 
@@ -81,12 +91,14 @@ BENCH_OVERLAP_JSON = os.path.join(REPO, "BENCH_overlap.json")
 BENCH_SHARD_JSON = os.path.join(REPO, "BENCH_shard.json")
 BENCH_ELASTIC_JSON = os.path.join(REPO, "BENCH_elastic.json")
 BENCH_WIRE_JSON = os.path.join(REPO, "BENCH_wire.json")
+BENCH_GROUPS_JSON = os.path.join(REPO, "BENCH_groups.json")
 _SWEEP_MARKER = "SWEEP_CSV_JSON:"
 _SCHED_MARKER = "SCHED_JSON:"
 _E2E_MARKER = "E2E_JSON:"
 _SHARD_MARKER = "SHARD_JSON:"
 _ELASTIC_MARKER = "ELASTIC_JSON:"
 _WIRE_MARKER = "WIRE_JSON:"
+_GROUPS_MARKER = "GROUPS_JSON:"
 
 
 def _sweep_cases():
@@ -1350,6 +1362,200 @@ def _wire_subprocess(iters: int = 6) -> List[dict]:
 
 
 # ---------------------------------------------------------------------------
+# gossip policy groups: per-group cadence / schedule / wire (DESIGN §12)
+# ---------------------------------------------------------------------------
+
+GROUPS_SWEEP_WINDOW = 8  # byte-model window; a multiple of every cadence
+
+
+def groups_sweep(iters: int = 6) -> dict:
+    """Policy-group sweep on the smoke MoE transformer (8 host devices,
+    DESIGN §12): per ``--gossip-groups`` config, us/step of the group
+    mixer on the real grouped bus layout plus the modeled per-group wire
+    bytes over a :data:`GROUPS_SWEEP_WINDOW`-step window, behind two
+    built-in gates (the CI contract of the ``moe-gossip-smoke`` job):
+
+    * **segment composition** — on the 2-group all-gossip layout
+      (``moe:1``) the group mixer must equal the whole-bus schedule mixer
+      bit-exactly (ring mixing is row-independent, so slicing the bus into
+      contiguous group segments and mixing each cannot change a bit), and
+      on the opt-out layout (``moe``) the expert rows must come back
+      untouched while the dense rows match the whole-bus mix of their
+      slice;
+    * **byte accounting** — the opt-out config ships strictly fewer wire
+      bytes per window than the ungrouped all-gossip baseline, and on the
+      shared 2-group layout the all-gossip − opt-out delta equals the
+      experts group's modeled bytes EXACTLY (the group byte model of
+      ``repro.core.schedule.group_wire_bytes_per_step``); the slow-cycle
+      config (``moe:4``) lands in between, shipping expert bytes on 1-in-4
+      steps only.
+
+    Timing is CPU wall-clock (structure only); the byte columns are the
+    modeled TPU wire claim.  Any gate failure raises.
+    """
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import RunConfig
+    from repro.core import group_wire_bytes_per_step, make_group_mixer
+    from repro.core.mixing import make_schedule_mixer
+    from repro.launch.mesh import gossip_agent_axes, make_gossip_mesh
+    from repro.models import build_model
+    from repro.train import (bus_layout_for, make_gossip_schedule,
+                             make_group_plans, resolve_features)
+    from .common import timeit_us
+
+    A, W = 8, GROUPS_SWEEP_WINDOW
+    cfg = get_smoke_config("deepseek_moe_16b")
+    model = build_model(cfg)
+    mesh = make_gossip_mesh(A)
+    axes = gossip_agent_axes(mesh)
+
+    configs = [
+        ("baseline_all_gossip", ""),       # one dense group, legacy path
+        ("grouped_all_gossip", "moe:1"),   # 2-group layout, both every step
+        ("moe_opt_out", "moe"),            # experts never gossip
+        ("moe_slow_cycle", "moe:4"),       # experts gossip 1-in-4 steps
+    ]
+    rows_out, by_label = [], {}
+    for label, gspec in configs:
+        run = RunConfig(global_batch=A, seq_len=8, algorithm="edm",
+                        gossip_engine="ppermute", gossip_groups=gspec,
+                        remat=False)
+        feats = resolve_features(run)
+        layout = bus_layout_for(model, A, groups=feats.groups)
+        sched = make_gossip_schedule(run, A)
+        plans = make_group_plans(run, layout, sched)
+        scheds = {p.group.name: p.sched for p in plans
+                  if p.sched is not None}
+        per_step = [group_wire_bytes_per_step(layout.groups, scheds, t)
+                    for t in range(W)]
+        window = {g.name: sum(s[g.name] for s in per_step)
+                  for g in layout.groups}
+        window["total"] = sum(s["total"] for s in per_step)
+
+        mix = make_group_mixer(plans, engine="ppermute", mesh=mesh,
+                               agent_axes=axes)
+        bus = jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(0), (A, layout.rows, 128)),
+            NamedSharding(mesh, P(axes)))
+        # time a gossip step for every group (the max-cadence step W-1) and
+        # a skip step (step 0 — for slow-cycle/opt-out the inactive groups'
+        # rows are pure slices there)
+        mix_on = jax.jit(lambda b: mix(b, W - 1))
+        mix_off = jax.jit(lambda b: mix(b, 0))
+        us_on = timeit_us(mix_on, bus, iters=iters)
+        us_off = timeit_us(mix_off, bus, iters=iters)
+        row = {
+            "config": label, "gossip_groups": gspec, "agents": A,
+            "rows": layout.rows,
+            "group_rows": {g.name: g.rows for g in layout.groups},
+            "group_gossip_every": {g.name: g.gossip_every
+                                   for g in layout.groups},
+            "window_steps": W,
+            "wire_bytes_window": {k: int(v) for k, v in window.items()},
+            "wire_bytes_per_step_avg": round(window["total"] / W, 1),
+            "us_per_step_gossip": round(us_on, 1),
+            "us_per_step_skip": round(us_off, 1),
+        }
+        rows_out.append(row)
+        by_label[label] = dict(row, layout=layout, sched=sched, mix=mix,
+                               bus=bus)
+
+    # --- segment-composition gates (bit-exact, any divergence raises) ---
+    ga = by_label["grouped_all_gossip"]
+    whole = make_schedule_mixer(ga["sched"], "ppermute", mesh=mesh,
+                                agent_axes=axes)
+    for t in range(4):
+        want = np.asarray(jax.jit(lambda b, t=t: whole(b, t))(ga["bus"]))
+        got = np.asarray(jax.jit(lambda b, t=t: ga["mix"](b, t))(ga["bus"]))
+        np.testing.assert_array_equal(
+            got, want, err_msg=f"groups gate: 2-group all-gossip mixer != "
+                               f"whole-bus schedule mixer at step {t}")
+    oo = by_label["moe_opt_out"]
+    (eg,) = [g for g in oo["layout"].groups if g.name == "experts"]
+    got = np.asarray(jax.jit(lambda b: oo["mix"](b, 0))(oo["bus"]))
+    src = np.asarray(oo["bus"])
+    np.testing.assert_array_equal(
+        got[:, eg.row:eg.row + eg.rows], src[:, eg.row:eg.row + eg.rows],
+        err_msg="groups gate: opt-out expert rows were touched by gossip")
+    want_dense = np.asarray(jax.jit(lambda b: whole(b, 0))(oo["bus"]))
+    dense_rows = [slice(g.row, g.row + g.rows) for g in oo["layout"].groups
+                  if g.name != "experts"]
+    for sl in dense_rows:
+        np.testing.assert_array_equal(
+            got[:, sl], want_dense[:, sl],
+            err_msg="groups gate: opt-out dense rows != whole-bus mix")
+
+    # --- byte-accounting gates ---
+    base = by_label["baseline_all_gossip"]["wire_bytes_window"]["total"]
+    all2 = ga["wire_bytes_window"]["total"]
+    opt = oo["wire_bytes_window"]["total"]
+    slow = by_label["moe_slow_cycle"]["wire_bytes_window"]["total"]
+    experts = ga["wire_bytes_window"]["experts"]
+    assert opt < base, (opt, base)
+    assert all2 - opt == experts, (all2, opt, experts)
+    assert opt < slow < all2, (opt, slow, all2)
+    assert slow - opt == experts // 4, (slow, opt, experts)
+    gates = {
+        "segment_composition": "pass",
+        "opt_out_rows_untouched": "pass",
+        "opt_out_lt_baseline": {"opt_out": int(opt), "baseline": int(base),
+                                "status": "pass"},
+        "delta_eq_expert_bytes": {"all_gossip": int(all2),
+                                  "opt_out": int(opt),
+                                  "experts_window": int(experts),
+                                  "status": "pass"},
+        "slow_cycle_between": {"slow": int(slow), "status": "pass"},
+    }
+    return {"rows": rows_out, "gates": gates}
+
+
+def write_groups_bench_json(rows: List[dict], gates: dict) -> str:
+    """Persist the policy-group sweep + byte/composition gates to
+    BENCH_groups.json at the repo root."""
+    payload = {
+        "bench": "gossip_policy_groups",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "note": (
+            "Gossip policy groups (DESIGN §12): per-leaf-group schedules, "
+            "cadences and wire formats over one packed superbuffer.  "
+            "'results' are measured on the 8-agent smoke MoE transformer "
+            "behind the segment-composition gates (2-group all-gossip == "
+            "whole-bus mixer bit-exactly; opt-out expert rows untouched); "
+            "the byte columns carry the modeled wire claim: expert "
+            "opt-out ships strictly fewer bytes than the all-gossip "
+            "baseline, with the all-gossip - opt-out delta equal to the "
+            "experts group's modeled bytes exactly, and slow-cycle "
+            "(moe:4) in between at 1-in-4 expert steps."),
+        "results": rows,
+        "gates": gates,
+    }
+    with open(BENCH_GROUPS_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return BENCH_GROUPS_JSON
+
+
+def _groups_csv_rows(rows: List[dict]) -> List[str]:
+    from .common import csv_row
+    return [csv_row(
+        f"gossip_groups/{row['config']}",
+        row["us_per_step_gossip"],
+        f"A={row['agents']};rows={row['rows']};"
+        f"wire_window={row['wire_bytes_window']['total']};"
+        f"avg_step={row['wire_bytes_per_step_avg']}") for row in rows]
+
+
+def _groups_subprocess(iters: int = 6) -> dict:
+    """Run :func:`groups_sweep` under an 8-device host platform."""
+    return _bench_subprocess(["--groups-inner", "--iters", str(iters)],
+                             _GROUPS_MARKER, 8, "groups sweep")
+
+
+# ---------------------------------------------------------------------------
 # BLOCK_ROWS autotune (ROADMAP "tune BLOCK_ROWS", CPU-measurable half)
 # ---------------------------------------------------------------------------
 
@@ -1586,10 +1792,25 @@ def _cli() -> None:
                          "gates; writes BENCH_wire.json")
     ap.add_argument("--wire-inner", action="store_true",
                     help="(inner) wire format sweep; needs 8 devices")
+    ap.add_argument("--groups", action="store_true",
+                    help="gossip policy-group sweep (DESIGN §12; in an "
+                         "8-device subprocess): us/step + modeled per-group "
+                         "wire bytes on the smoke MoE transformer per "
+                         "--gossip-groups config, behind the segment-"
+                         "composition and byte-accounting gates; writes "
+                         "BENCH_groups.json")
+    ap.add_argument("--groups-inner", action="store_true",
+                    help="(inner) policy-group sweep; needs 8 devices")
     args = ap.parse_args()
 
     if args.sweep:
         print(_SWEEP_MARKER + json.dumps(sweep()))
+    elif args.groups_inner:
+        print(_GROUPS_MARKER + json.dumps(groups_sweep(iters=args.iters)))
+    elif args.groups:
+        payload = _groups_subprocess(iters=args.iters)
+        print("\n".join(_groups_csv_rows(payload["rows"])))
+        print(f"wrote {write_groups_bench_json(payload['rows'], payload['gates'])}")
     elif args.wire_inner:
         print(_WIRE_MARKER + json.dumps(wire_sweep(iters=args.iters)))
     elif args.wire:

@@ -191,6 +191,15 @@ class RunConfig:
     # that cast lever and, unlike it, composes with overlap="delayed").
     wire: str = "f32"                # f32 | bf16 | int8
     gossip_every: int = 1            # gossip every k steps (local-EDM, §Perf)
+    # policy groups (DESIGN §12): the single declarative entry point for
+    # WHAT gossips, HOW OFTEN and at WHAT precision.  "" = one default
+    # "dense" group (bit-identical to the ungrouped bus); presets
+    # "moe[:k]" / "ssm[:k]" put expert / conv+SSM-state leaves in their
+    # own group (k = that group's gossip_every, 0 = full opt-out); a JSON
+    # list gives explicit specs: [{"name": ..., "match": [...],
+    # "gossip_every": ..., "wire": ..., "schedule": ...}, ...].
+    # Parsed by repro.train.trainer.resolve_group_specs.
+    gossip_groups: str = ""
     moe_sharding: bool = False       # explicit MoE dispatch constraints (§Perf)
     moe_impl: str = "gspmd"          # gspmd | shard_map  (§Perf serving path)
     attn_bf16_path: bool = False     # bf16 attention data path (§Perf)

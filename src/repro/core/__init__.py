@@ -5,11 +5,12 @@ from .topology import (  # noqa: F401
 )
 from .mixing import (  # noqa: F401
     mix_dense, mix_shifts, mix_ppermute, mix_dense_sharded, make_mixer,
-    make_schedule_mixer, make_overlap_mixer, accumulate_f32,
+    make_schedule_mixer, make_overlap_mixer, build_mixer, GroupPlan,
+    make_group_mixer, accumulate_f32,
 )
 from .schedule import (  # noqa: F401
     GossipSchedule, StaticSchedule, RoundRobinExp, AlternatingHierarchical,
-    make_schedule, wire_bytes_per_step,
+    make_schedule, wire_bytes_per_step, group_wire_bytes_per_step,
 )
 from .elastic import (  # noqa: F401
     LivenessMask, MaskedTopology, degrade_round, DropPlan, ElasticSchedule,
@@ -22,7 +23,8 @@ from .wire import (  # noqa: F401
     WIRE_FORMATS, WireCodec, make_codec, encode_ef,
 )
 from .bus import (  # noqa: F401
-    BusLayout, LeafSlot, make_layout, layout_of, pack_tree, unpack_tree,
+    BusLayout, LeafSlot, GroupSpec, BusGroup, make_layout, layout_of,
+    group_specs_from_json, leaf_paths, pack_tree, unpack_tree,
     leaf_views, make_pipeline, pipeline_payload, pipeline_advance,
 )
 from . import metrics  # noqa: F401

@@ -37,6 +37,16 @@ Layout contract (DESIGN §5):
   bf16 bus is the lossy wire-compression configuration and is only exact
   for bf16 leaves.
 
+Policy groups (DESIGN §12): the bus is no longer one monolithic policy —
+it is a small number of named **groups**, each owning a contiguous,
+block-aligned row range plus its own gossip policy (schedule name,
+``gossip_every`` cadence — 0 opts the group out of gossip entirely — and
+wire format).  Leaves are assigned to groups by substring predicates over
+their ``|``-joined pytree path (``blocks|0|moe|w_gate``); unmatched leaves
+fall into a trailing ``"dense"`` group.  The default (no specs) is a
+single ``"dense"`` group spanning the whole buffer whose layout is
+bit-identical to the ungrouped layout — pinned by test.
+
 Layouts are static Python objects (hashable, cached) — ``pack_tree`` /
 ``unpack_tree`` are pure jnp reshuffles, safe to trace under jit, and a
 jitted step that closes over a layout never retraces on weight values.
@@ -44,12 +54,13 @@ jitted step that closes over a layout never retraces on weight values.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Tuple
+from typing import Any, Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["LANE", "BusLayout", "LeafSlot", "make_layout", "layout_of",
+__all__ = ["LANE", "BusLayout", "LeafSlot", "GroupSpec", "BusGroup",
+           "make_layout", "layout_of", "group_specs_from_json", "leaf_paths",
            "pack_tree", "unpack_tree", "leaf_views", "padded_rows",
            "make_pipeline", "pipeline_payload", "pipeline_advance"]
 
@@ -80,6 +91,84 @@ class LeafSlot:
 
 
 @dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """Declarative gossip policy for one set of leaves (DESIGN §12).
+
+    ``match`` is a tuple of substring patterns tested against each leaf's
+    ``|``-joined pytree path (e.g. ``("moe|w_gate",)`` matches every
+    expert gate across all blocks); an empty tuple is a catch-all.  A
+    callable ``path -> bool`` is also accepted (tests / exotic policies).
+
+    ``gossip_every``: 1 = every gossip round, k > 1 = slow-cycle (the
+    group mixes on steps where ``step % k == k-1``, with its own round
+    clock ``step // k`` so no schedule round is gcd-aliased away),
+    0 = full opt-out (local-only leaves — ships zero wire bytes, pinned
+    in HLO).  ``wire``: per-group payload format ("f32"/"bf16"/"int8",
+    stateless quantization — the error-feedback wire stays a run-level,
+    single-group feature).  ``schedule``: gossip-schedule name override
+    ("" inherits the run's schedule).
+    """
+
+    name: str
+    match: Union[Tuple[str, ...], Callable[[str], bool]] = ()
+    gossip_every: int = 1
+    wire: str = "f32"
+    schedule: str = ""
+
+    def __post_init__(self):
+        assert self.gossip_every >= 0, self.gossip_every
+        assert self.wire in ("f32", "bf16", "int8"), self.wire
+        if not callable(self.match):
+            object.__setattr__(self, "match", tuple(self.match))
+
+    def matches(self, path: str) -> bool:
+        if callable(self.match):
+            return bool(self.match(path))
+        return any(p in path for p in self.match) if self.match else True
+
+
+@dataclasses.dataclass(frozen=True)
+class BusGroup:
+    """Resolved policy group inside a layout: rows ``[row, row + rows)``
+    of the bus, holding the slots indexed by ``slots`` (indices into
+    ``layout.slots``), under one gossip policy.  ``rows`` is a whole
+    multiple of ``block_rows · shards`` (or 0 if the group matched no
+    leaves), so every group is independently griddable and shardable."""
+
+    name: str
+    row: int
+    rows: int
+    slots: Tuple[int, ...]
+    gossip_every: int = 1
+    wire: str = "f32"
+    schedule: str = ""
+
+    @property
+    def elems(self) -> int:
+        """Padded elements this group ships per agent per permute."""
+        return self.rows * LANE
+
+
+def group_specs_from_json(obj: Any) -> Tuple[GroupSpec, ...]:
+    """Build group specs from a parsed ``--gossip-groups`` JSON list:
+    ``[{"name": ..., "match": [...], "gossip_every": ..., "wire": ...,
+    "schedule": ...}, ...]``.  ``match`` may be one pattern or a list."""
+    assert isinstance(obj, (list, tuple)), obj
+    specs = []
+    for d in obj:
+        assert isinstance(d, dict) and "name" in d, d
+        match = d.get("match", ())
+        if isinstance(match, str):
+            match = (match,)
+        specs.append(GroupSpec(
+            name=str(d["name"]), match=tuple(match),
+            gossip_every=int(d.get("gossip_every", 1)),
+            wire=str(d.get("wire", "f32")),
+            schedule=str(d.get("schedule", ""))))
+    return tuple(specs)
+
+
+@dataclasses.dataclass(frozen=True)
 class BusLayout:
     """Static bus layout: where every leaf of the packed tree lives.
 
@@ -95,6 +184,19 @@ class BusLayout:
     block_rows: int
     dtype: Any                 # bus storage dtype (f32 default)
     shards: int = 1            # FSDP row-shard count (DESIGN §7)
+    groups: Tuple[BusGroup, ...] = ()  # policy groups, contiguous by row
+
+    @property
+    def is_grouped(self) -> bool:
+        """True when the layout carries a non-trivial policy — more than
+        one populated group, or a single group with a non-default policy.
+        Ungrouped and trivially-grouped layouts take the legacy (single
+        permute plan) mixing path and are bit-identical to it."""
+        live = [g for g in self.groups if g.rows]
+        if len(live) > 1:
+            return True
+        return any(g.gossip_every != 1 or g.wire != "f32" or g.schedule
+                   for g in live)
 
     @property
     def shard_rows(self) -> int:
@@ -128,11 +230,34 @@ def _leaf_signature(tree: Any) -> tuple:
                            for l in flat))
 
 
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return "|".join(out)
+
+
+def leaf_paths(tree: Any) -> List[str]:
+    """``|``-joined pytree path of every leaf, in flatten order — the
+    strings :class:`GroupSpec` predicates match against (same separator as
+    the checkpoint key flattening)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [_path_str(p) for p, _ in flat]
+
+
 _LAYOUT_CACHE: dict = {}
 
 
 def make_layout(tree: Any, *, block_rows: int | None = None,
-                dtype: Any = jnp.float32, shards: int = 1) -> BusLayout:
+                dtype: Any = jnp.float32, shards: int = 1,
+                groups: Optional[Tuple[GroupSpec, ...]] = None) -> BusLayout:
     """Build (or fetch from cache) the bus layout for ``tree``.
 
     ``tree`` leaves must be floating arrays (or ShapeDtypeStructs) of shape
@@ -140,9 +265,16 @@ def make_layout(tree: Any, *, block_rows: int | None = None,
     differing only in ``A`` share one layout.  ``block_rows`` defaults to
     the kernel's :data:`~repro.kernels.edm_update.BLOCK_ROWS` so the packed
     buffer is directly griddable by ``edm_update_flat``.  ``shards`` rounds
-    the total rows up to ``block_rows · shards`` so the row axis splits
+    each group's rows up to ``block_rows · shards`` so the row axis splits
     evenly into per-shard blocks that are themselves griddable
     (shard-resident gossip, DESIGN §7).
+
+    ``groups`` assigns leaves to policy groups (DESIGN §12): each leaf
+    joins the first spec whose predicate matches its path; unmatched
+    leaves fall into a trailing default ``"dense"`` group.  Groups occupy
+    contiguous row ranges in spec order, each independently rounded to
+    the ``block_rows · shards`` quantum.  ``groups=None`` (or a single
+    catch-all spec) yields a layout bit-identical to the ungrouped bus.
     """
     from repro.kernels.edm_update import BLOCK_ROWS, LANE as _KERNEL_LANE
     assert _KERNEL_LANE == LANE, (
@@ -154,33 +286,59 @@ def make_layout(tree: Any, *, block_rows: int | None = None,
     assert shards >= 1, shards
     flat, treedef = jax.tree_util.tree_flatten(tree)
     assert flat, "cannot build a bus layout for an empty tree"
-    key = (_leaf_signature(tree), block_rows, jnp.dtype(dtype).name, shards)
+    specs = tuple(groups) if groups else (GroupSpec("dense"),)
+    if not any((not callable(s.match)) and not s.match for s in specs):
+        # no catch-all: unmatched leaves gossip normally in "dense"
+        specs = specs + (GroupSpec("dense"),)
+    names = [s.name for s in specs]
+    assert len(set(names)) == len(names), f"duplicate group names: {names}"
+    key = (_leaf_signature(tree), block_rows, jnp.dtype(dtype).name, shards,
+           specs)
     hit = _LAYOUT_CACHE.get(key)
     if hit is not None:
         return hit
-    slots: List[LeafSlot] = []
-    row = 0
-    for leaf in flat:
-        assert leaf.ndim >= 1, "bus leaves need a leading agent axis"
-        assert jnp.issubdtype(leaf.dtype, jnp.floating), \
-            f"bus packs floating leaves only, got {leaf.dtype}"
-        shape = tuple(leaf.shape[1:])
-        size = 1
-        for s in shape:
-            size *= s
-        rows = padded_rows(size)
-        slots.append(LeafSlot(row, rows, shape, jnp.dtype(leaf.dtype), size))
-        row += rows
+    paths = leaf_paths(tree)
+    members: List[List[int]] = [[] for _ in specs]
+    for i, path in enumerate(paths):
+        for gi, spec in enumerate(specs):
+            if spec.matches(path):
+                members[gi].append(i)
+                break
     quantum = block_rows * shards
-    total = -(-row // quantum) * quantum if row else quantum
-    layout = BusLayout(treedef, tuple(slots), total, block_rows,
-                       jnp.dtype(dtype), shards)
+    slot_at: List[Optional[LeafSlot]] = [None] * len(flat)
+    resolved: List[BusGroup] = []
+    base = 0
+    for spec, idxs in zip(specs, members):
+        row = base
+        for i in idxs:
+            leaf = flat[i]
+            assert leaf.ndim >= 1, "bus leaves need a leading agent axis"
+            assert jnp.issubdtype(leaf.dtype, jnp.floating), \
+                f"bus packs floating leaves only, got {leaf.dtype}"
+            shape = tuple(leaf.shape[1:])
+            size = 1
+            for s in shape:
+                size *= s
+            rows = padded_rows(size)
+            slot_at[i] = LeafSlot(row, rows, shape, jnp.dtype(leaf.dtype),
+                                  size)
+            row += rows
+        used = row - base
+        grows = -(-used // quantum) * quantum if used else 0
+        resolved.append(BusGroup(spec.name, base, grows, tuple(idxs),
+                                 spec.gossip_every, spec.wire, spec.schedule))
+        base += grows
+    total = base if base else quantum
+    assert all(s is not None for s in slot_at)
+    layout = BusLayout(treedef, tuple(slot_at), total, block_rows,
+                       jnp.dtype(dtype), shards, tuple(resolved))
     _LAYOUT_CACHE[key] = layout
     return layout
 
 
 def layout_of(model, n_agents: int, *, block_rows: int | None = None,
-              dtype: Any = jnp.float32, shards: int = 1) -> BusLayout:
+              dtype: Any = jnp.float32, shards: int = 1,
+              groups: Optional[Tuple[GroupSpec, ...]] = None) -> BusLayout:
     """Layout for a :class:`~repro.models.api.Model`'s parameter tree with
     a leading agent axis — shape-only (``jax.eval_shape``), no allocation."""
     shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -188,24 +346,35 @@ def layout_of(model, n_agents: int, *, block_rows: int | None = None,
         lambda s: jax.ShapeDtypeStruct((n_agents,) + tuple(s.shape), s.dtype),
         shapes)
     return make_layout(lifted, block_rows=block_rows, dtype=dtype,
-                       shards=shards)
+                       shards=shards, groups=groups)
 
 
 def pack_tree(layout: BusLayout, tree: Any) -> jax.Array:
     """Pack ``tree`` (leaves ``(A, *shape)``) into one ``(A, rows, 128)``
-    buffer in bus dtype.  Pure jnp; pad elements are zero."""
+    buffer in bus dtype.  Pure jnp; pad elements are zero.  Segments are
+    emitted in physical row order (slot rows are not monotone in flatten
+    order once the layout is grouped), with zero-fill for every group's
+    tail pad."""
     flat = layout.treedef.flatten_up_to(tree)
     assert len(flat) == len(layout.slots)
     A = flat[0].shape[0]
     parts = []
-    for leaf, slot in zip(flat, layout.slots):
+    cursor = 0  # in elements of the (A, rows·128) flat view
+    order = sorted(range(len(flat)), key=lambda i: layout.slots[i].row)
+    for i in order:
+        leaf, slot = flat[i], layout.slots[i]
         assert leaf.shape == (A,) + slot.shape, (leaf.shape, A, slot.shape)
+        gap = slot.row * LANE - cursor
+        assert gap >= 0, (slot.row, cursor)
+        if gap:
+            parts.append(jnp.zeros((A, gap), layout.dtype))
         seg = leaf.reshape(A, slot.size).astype(layout.dtype)
         pad = slot.rows * LANE - slot.size
         if pad:
             seg = jnp.pad(seg, ((0, 0), (0, pad)))
         parts.append(seg)
-    tail = layout.rows * LANE - sum(s.rows for s in layout.slots) * LANE
+        cursor = (slot.row + slot.rows) * LANE
+    tail = layout.rows * LANE - cursor
     if tail:
         parts.append(jnp.zeros((A, tail), layout.dtype))
     return jnp.concatenate(parts, axis=1).reshape(A, layout.rows, LANE)

@@ -37,6 +37,7 @@ factor and no all-gather ever feeds a gossip permute.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Any
@@ -51,6 +52,7 @@ from .topology import Topology
 
 __all__ = ["mix_dense", "mix_shifts", "mix_ppermute", "mix_dense_sharded",
            "make_mixer", "make_schedule_mixer", "make_overlap_mixer",
+           "build_mixer", "GroupPlan", "make_group_mixer",
            "accumulate_f32"]
 
 
@@ -784,3 +786,134 @@ def make_overlap_mixer(sched, engine: str = "ppermute", mesh=None,
 
     complete.n_terms = K
     return issue, complete
+
+
+# ---------------------------------------------------------------------------
+# unified mixer factory + policy-group mixer (DESIGN §12)
+# ---------------------------------------------------------------------------
+
+def build_mixer(sched, *, mode: str = "schedule", engine: str = "shifts",
+                mesh=None, agent_axes=None, use_fused_kernel: bool = False,
+                interpret: bool | None = None, transport: str = "auto",
+                shard_axes: str | None = None, wire=None):
+    """Single mixer entry point over the three construction modes.
+
+    ``mode="static"`` takes one :class:`~repro.core.topology.Topology` (or
+    a period-1 schedule) and returns ``mix(tree) -> tree``
+    (:func:`make_mixer`); ``mode="schedule"`` takes a
+    :class:`~repro.core.schedule.GossipSchedule` (a bare topology is
+    wrapped static) and returns ``mix(tree, step=0)``
+    (:func:`make_schedule_mixer`); ``mode="overlap"`` returns the
+    ``(issue, complete)`` phase-split pair (:func:`make_overlap_mixer`).
+    The legacy ``make_*`` names stay as thin aliases of this factory's
+    modes — new call sites should come through here.
+    """
+    rounds = getattr(sched, "rounds", None)
+    if mode == "static":
+        topo = sched
+        if rounds is not None:
+            assert len(rounds) == 1, \
+                f"mode='static' needs a topology or a period-1 schedule, " \
+                f"got period {len(rounds)}"
+            topo = rounds[0]
+        return make_mixer(topo, engine, mesh=mesh, agent_axes=agent_axes,
+                          use_fused_kernel=use_fused_kernel,
+                          transport=transport, shard_axes=shard_axes,
+                          wire=wire)
+    if rounds is None:
+        from .schedule import StaticSchedule
+        sched = StaticSchedule(sched)
+    if mode == "schedule":
+        return make_schedule_mixer(sched, engine, mesh=mesh,
+                                   agent_axes=agent_axes,
+                                   use_fused_kernel=use_fused_kernel,
+                                   shard_axes=shard_axes, wire=wire)
+    if mode == "overlap":
+        return make_overlap_mixer(sched, engine, mesh=mesh,
+                                  agent_axes=agent_axes,
+                                  use_fused_kernel=use_fused_kernel,
+                                  interpret=interpret,
+                                  shard_axes=shard_axes, wire=wire)
+    raise ValueError(f"unknown mixer mode: {mode!r} "
+                     "(expected 'static', 'schedule' or 'overlap')")
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """One policy group's resolved mixing plan: the layout's
+    :class:`~repro.core.bus.BusGroup` (row range + cadence), the group's
+    own :class:`~repro.core.schedule.GossipSchedule` (``None`` for a full
+    opt-out) and an optional per-group wire codec (stateless
+    quantize-on-the-wire; the error-feedback wire stays run-level)."""
+
+    group: Any
+    sched: Any = None
+    wire: Any = None
+
+
+def make_group_mixer(plans, *, engine: str = "ppermute", mesh=None,
+                     agent_axes=None, use_fused_kernel: bool = False,
+                     shard_axes: str | None = None):
+    """Group-aware bus mixer (DESIGN §12): ``mix(bus, step=0) -> bus``.
+
+    ``plans`` must cover the full ``(A, rows, 128)`` bus with contiguous
+    row ranges.  Each step issues one permute plan per *active* group:
+
+    * ``gossip_every == 0`` (opt-out) groups are pure slices — no mixer is
+      ever built for their rows, so they contribute ZERO collectives to
+      the lowered HLO (pinned by test);
+    * ``gossip_every == k > 1`` groups mix only on steps with
+      ``step % k == k-1``, on their own round clock ``step // k`` so the
+      skip cadence cannot gcd-alias schedule rounds away; off-steps lower
+      through ``lax.cond`` (or a Python branch for concrete steps) and
+      ship nothing;
+    * every-step groups apply their schedule round at ``step`` directly.
+
+    Each group's sub-mixer sees the group's row slice as a one-leaf tree,
+    so it reuses the unmodified engines — per-group schedules, wire
+    codecs and masked rounds all compose exactly as on the whole-bus
+    path.  The mixed slices are reassembled by row-order concatenation.
+    """
+    plans = sorted(plans, key=lambda p: p.group.row)
+    segments = []  # (row, rows, apply(bus_seg, step) -> seg)
+    cursor = 0
+    for plan in plans:
+        g = plan.group
+        assert g.row == cursor, \
+            f"group {g.name!r} rows not contiguous: starts at {g.row}, " \
+            f"expected {cursor}"
+        cursor = g.row + g.rows
+        if g.rows == 0:
+            continue
+        if g.gossip_every == 0 or plan.sched is None:
+            segments.append((g.row, g.rows, None))
+            continue
+        inner = make_schedule_mixer(plan.sched, engine, mesh=mesh,
+                                    agent_axes=agent_axes,
+                                    use_fused_kernel=use_fused_kernel,
+                                    shard_axes=shard_axes, wire=plan.wire)
+        k = g.gossip_every
+        if k == 1:
+            segments.append((g.row, g.rows, inner))
+            continue
+
+        def gated(seg, step, inner=inner, k=k):
+            gstep = step // k
+            if isinstance(step, (int, np.integer)):
+                return inner(seg, gstep) if step % k == k - 1 else seg
+            return jax.lax.cond(step % k == k - 1,
+                                lambda s: inner(s, gstep),
+                                lambda s: s, seg)
+
+        segments.append((g.row, g.rows, gated))
+
+    def mix(bus, step=0):
+        assert bus.ndim == 3, bus.shape
+        assert cursor == bus.shape[1], (cursor, bus.shape)
+        out = []
+        for row, rows, apply in segments:
+            seg = jax.lax.slice_in_dim(bus, row, row + rows, axis=1)
+            out.append(seg if apply is None else apply(seg, step))
+        return out[0] if len(out) == 1 else jnp.concatenate(out, axis=1)
+
+    return mix

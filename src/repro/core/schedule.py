@@ -41,7 +41,7 @@ from .topology import (ShiftTerm, Topology, exp_graph, hierarchical,
 __all__ = [
     "GossipSchedule", "StaticSchedule", "RoundRobinExp",
     "AlternatingHierarchical", "make_schedule", "SCHEDULES",
-    "term_wire_rows", "wire_bytes_per_step",
+    "term_wire_rows", "wire_bytes_per_step", "group_wire_bytes_per_step",
 ]
 
 
@@ -308,3 +308,41 @@ def wire_bytes_per_step(sched: GossipSchedule, step: int, *,
     else:
         rows = sum(term_wire_rows(topo, t, B) for t in topo.terms) * n_dev
     return rows * bytes_per_agent
+
+
+def group_wire_bytes_per_step(groups, scheds, step: int, *,
+                              itemsize: int = 4, agents_per_device: int = 1,
+                              engine: str = "ppermute",
+                              codecs=None) -> dict:
+    """Per-group wire-byte model for a policy-group bus (DESIGN §12).
+
+    ``groups`` is an iterable of :class:`repro.core.bus.BusGroup` (anything
+    with ``name``/``elems``/``gossip_every``); ``scheds`` maps group name →
+    :class:`GossipSchedule` (opt-out groups need no entry); ``codecs``
+    optionally maps group name → :class:`repro.core.wire.WireCodec`.
+
+    A group ships bytes only on *its* gossip steps: ``gossip_every == 0``
+    never (full opt-out — zero wire bytes, matching the group mixer's
+    zero-permute HLO), ``k >= 1`` on steps with ``step % k == k-1``, and
+    then the group's round clock is ``step // k``
+    (:func:`repro.train.trainer.gossip_round_step` — no gcd aliasing
+    between the skip cadence and the schedule period).  Returns
+    ``{name: bytes, ..., "total": bytes}``.
+    """
+    out = {}
+    total = 0
+    for g in groups:
+        k = g.gossip_every
+        if k == 0 or g.rows == 0 or (k > 1 and step % k != k - 1):
+            out[g.name] = 0
+            continue
+        gstep = step // k if k > 1 else step
+        codec = (codecs or {}).get(g.name)
+        b = wire_bytes_per_step(
+            scheds[g.name], gstep, elems_per_agent=g.elems,
+            itemsize=itemsize, agents_per_device=agents_per_device,
+            engine=engine, codec=codec)
+        out[g.name] = b
+        total += b
+    out["total"] = total
+    return out

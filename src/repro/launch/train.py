@@ -18,10 +18,10 @@ import jax
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.base import RunConfig
 from repro.data import SyntheticLM
+from repro.launch.flags import add_run_flags, run_config_overrides
 from repro.models import build_model
 from repro.train import (build_train_step, bus_layout_for, checkpoint,
-                         init_state, make_gossip_schedule, use_overlap,
-                         use_packed_bus, use_wire)
+                         init_state, make_gossip_schedule, resolve_features)
 
 
 def main():
@@ -37,56 +37,18 @@ def main():
                          "total, gossip over row-sharded buses")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--per-agent-batch", type=int, default=1)
-    ap.add_argument("--algorithm", default="edm")
-    ap.add_argument("--optimizer", dest="algorithm", default="edm",
-                    help="alias for --algorithm (e.g. edm, edm_ef, dsgd)")
-    ap.add_argument("--topology", default="ring")
     ap.add_argument("--pods", type=int, default=1,
                     help="pod count for torus/hier topologies; with "
                          "--agents pod, the number of pod-agents")
     ap.add_argument("--shards", type=int, default=0,
                     help="--agents pod: FSDP devices per pod-agent "
                          "(0 = device_count // pods)")
-    ap.add_argument("--gossip-engine", default="shifts",
-                    choices=["dense", "shifts", "ppermute"],
-                    help="mixing engine; ppermute needs one device per agent "
-                         "block (set XLA_FLAGS=--xla_force_host_platform_"
-                         "device_count=N on CPU)")
-    ap.add_argument("--gossip-schedule", default="static",
-                    choices=["static", "round_robin", "alt_hier"],
-                    help="time-varying gossip schedule (DESIGN §4): "
-                         "round_robin = one permute/step one-peer exp rounds")
-    ap.add_argument("--gossip-period", type=int, default=0,
-                    help="alt_hier: intra-pod rounds per inter-pod round")
-    ap.add_argument("--gossip-seed", type=int, default=0,
-                    help="round_robin: shuffle the offset order (0 = off)")
-    ap.add_argument("--agents-per-device", type=int, default=1,
-                    help="blocked ppermute: agents per mesh device, so "
-                         "A > device count runs without the shifts fallback")
     ap.add_argument("--fused-kernel", action="store_true",
                     help="fused Pallas EDM update + gossip combine")
-    ap.add_argument("--packed-bus", default=None,
-                    action=argparse.BooleanOptionalAction,
-                    help="packed parameter bus (DESIGN §5): params + EDM "
-                         "state in one (A, rows, 128) superbuffer — one "
-                         "edm_update launch and one ppermute per gossip "
-                         "term per step.  Default: on for edm + ppermute")
-    ap.add_argument("--overlap", default="off", choices=["off", "delayed"],
-                    help="overlapped gossip pipeline (DESIGN §6): 'delayed' "
-                         "issues the double-buffered payload's permutes "
-                         "before the backward pass and combines after it "
-                         "(one-step-stale mixing; needs the packed bus), "
-                         "'off' keeps gossip synchronous")
-    ap.add_argument("--wire", default="f32", choices=["f32", "bf16", "int8"],
-                    help="gossip wire format (DESIGN §9): 'bf16'/'int8' "
-                         "quantize the bus permute payloads through the "
-                         "error-feedback codec (int8 carries per-block f32 "
-                         "scales; a bus-shaped residual rides in the opt "
-                         "state), cutting wire bytes 2x / ~4x at the f32 "
-                         "divergence floor.  Needs the packed bus; composes "
-                         "with --overlap delayed and --agents pod")
-    ap.add_argument("--alpha", type=float, default=0.2)
-    ap.add_argument("--beta", type=float, default=0.9)
+    # every RunConfig-backed lever (--algorithm, --topology, --gossip-*,
+    # --packed-bus, --overlap, --wire, --gossip-groups, --alpha, --beta)
+    # comes off the shared table — see repro.launch.flags.RUN_FLAGS
+    add_run_flags(ap)
     ap.add_argument("--phi", type=float, default=0.2,
                     help="Dirichlet heterogeneity of the token streams")
     ap.add_argument("--ckpt", default="")
@@ -117,16 +79,10 @@ def main():
         n_agents = int(args.agents)
         shards = 1
     run = RunConfig(global_batch=n_agents * args.per_agent_batch,
-                    seq_len=args.seq, algorithm=args.algorithm,
-                    alpha=args.alpha, beta=args.beta, topology=args.topology,
+                    seq_len=args.seq,
                     agents="pod" if pod_agents else "data",
-                    gossip_engine=args.gossip_engine,
-                    gossip_schedule=args.gossip_schedule,
-                    gossip_period=args.gossip_period,
-                    gossip_seed=args.gossip_seed,
-                    agents_per_device=args.agents_per_device,
-                    packed_bus=args.packed_bus, overlap=args.overlap,
-                    wire=args.wire, remat=False)
+                    remat=False, **run_config_overrides(args))
+    feats = resolve_features(run)
     sched = make_gossip_schedule(run, n_agents,
                                  pods=1 if pod_agents else args.pods,
                                  churn=args.churn or None)
@@ -152,9 +108,10 @@ def main():
           f"λ_prod={stats['lambda']:.4f} "
           f"alg={args.algorithm} engine={args.gossip_engine}"
           f"{' +fused' if args.fused_kernel else ''}"
-          f"{' +bus' if use_packed_bus(run) else ''}"
-          f"{' +overlap' if use_overlap(run) else ''}"
-          f"{' wire=' + use_wire(run) if use_wire(run) != 'f32' else ''}")
+          f"{' +bus' if feats.packed_bus else ''}"
+          f"{' +overlap' if feats.overlap else ''}"
+          f"{' wire=' + feats.wire if feats.wire != 'f32' else ''}"
+          f"{' groups=' + ','.join(g.name for g in feats.groups) if feats.groups else ''}")
 
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        n_agents=n_agents, phi=args.phi)
@@ -169,8 +126,9 @@ def main():
                  cfg.d_model), dtype=jnp.dtype(cfg.dtype))
         return b
 
-    layout = (bus_layout_for(model, n_agents, shards=shards)
-              if use_packed_bus(run) else None)
+    layout = (bus_layout_for(model, n_agents, shards=shards,
+                             groups=feats.groups)
+              if feats.packed_bus else None)
     state = init_state(model, run, n_agents, jax.random.PRNGKey(0),
                        shards=shards)
     if args.resume:
@@ -192,11 +150,12 @@ def main():
         state = jax.tree.map(jax.device_put, state, shardings)
     # bus-resident state: donate so XLA aliases the superbuffers in place
     # (params/m/psi update without a second HBM copy, DESIGN §5)
-    donate = (0,) if use_packed_bus(run) else ()
+    donate = (0,) if feats.packed_bus else ()
     step = jax.jit(build_train_step(model, run, sched,
                                     use_fused_kernel=args.fused_kernel,
                                     mesh=mesh, agent_axes=agent_axes,
-                                    shard_axes=shard_axes),
+                                    shard_axes=shard_axes,
+                                    pods=1 if pod_agents else args.pods),
                    donate_argnums=donate)
     key = jax.random.PRNGKey(1)
     t0 = time.time()

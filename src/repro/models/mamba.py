@@ -21,7 +21,30 @@ import jax.numpy as jnp
 
 from .layers import dense_init, rms_norm
 
-__all__ = ["init_mamba", "apply_mamba", "init_ssm_cache", "ssm_scan_ref"]
+__all__ = ["init_mamba", "apply_mamba", "init_ssm_cache", "ssm_scan_ref",
+           "SSM_STATE_LEAF_PATTERNS", "ssm_state_group_spec"]
+
+# pytree-path patterns of the conv/SSM state-dynamics leaves: the causal
+# conv stencil and the per-channel state matrices (A_log/D/dt_bias) are
+# tiny, sensitive recurrence parameters — the projections (in/x/dt/out)
+# stay in the dense gossip group.
+SSM_STATE_LEAF_PATTERNS = ("ssm|conv_w", "ssm|conv_b", "ssm|A_log",
+                           "ssm|D", "ssm|dt_bias")
+
+
+def ssm_state_group_spec(gossip_every: int = 0, wire: str = "f32",
+                         schedule: str = ""):
+    """Policy-group spec for the conv/SSM state leaves (DESIGN §12).
+
+    Default ``gossip_every=0`` keeps them local-only (each agent's
+    recurrence dynamics track its own data distribution — averaging
+    S4D-initialized A_log across agents mid-training perturbs every
+    channel's time constant); ``gossip_every=k`` slow-cycles them.  Pass
+    through ``RunConfig.gossip_groups="ssm[:k]"``.
+    """
+    from repro.core.bus import GroupSpec
+    return GroupSpec("ssm_state", SSM_STATE_LEAF_PATTERNS,
+                     gossip_every=gossip_every, wire=wire, schedule=schedule)
 
 
 def init_mamba(key, cfg) -> Dict:

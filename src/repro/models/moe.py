@@ -15,7 +15,29 @@ import jax.numpy as jnp
 
 from .layers import dense_init, rms_norm, swiglu
 
-__all__ = ["init_moe", "apply_moe", "set_moe_mesh"]
+__all__ = ["init_moe", "apply_moe", "set_moe_mesh", "EXPERT_LEAF_PATTERNS",
+           "expert_group_spec"]
+
+# pytree-path patterns of the per-expert weights (leading expert dim E,
+# sharded over the expert-parallel axis).  The router, the MoE layernorm
+# and the shared experts are replicated and gossip with the dense group —
+# "moe|w_gate" does NOT match "moe|shared|w_gate".
+EXPERT_LEAF_PATTERNS = ("moe|w_gate", "moe|w_up", "moe|w_down")
+
+
+def expert_group_spec(gossip_every: int = 0, wire: str = "f32",
+                      schedule: str = ""):
+    """Policy-group spec for the expert weights (DESIGN §12).
+
+    Expert-parallel fleets keep expert shards resident per pod — the
+    default ``gossip_every=0`` opts them out of gossip entirely (each
+    pod's experts specialize on its data); ``gossip_every=k`` slow-cycles
+    them instead, optionally at a cheaper ``wire`` format or on their own
+    ``schedule``.  Pass through ``RunConfig.gossip_groups="moe[:k]"``.
+    """
+    from repro.core.bus import GroupSpec
+    return GroupSpec("experts", EXPERT_LEAF_PATTERNS,
+                     gossip_every=gossip_every, wire=wire, schedule=schedule)
 
 # §Perf lever: when a mesh is registered, the dispatch/combine buffers get
 # explicit sharding constraints; with impl="shard_map" the whole MoE FFN runs

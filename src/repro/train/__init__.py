@@ -1,7 +1,8 @@
 """repro.train — decentralized training loop substrate."""
 from .trainer import (  # noqa: F401
-    TrainState, batch_spec_tree, build_train_step, bus_layout_for,
-    gossip_round_step, init_state, make_gossip_schedule, make_topology,
-    prepend_agent_axis, state_specs, use_overlap, use_packed_bus, use_wire,
+    Features, TrainState, batch_spec_tree, build_train_step, bus_layout_for,
+    gossip_round_step, init_state, make_gossip_schedule, make_group_plans,
+    make_topology, prepend_agent_axis, resolve_features, resolve_group_specs,
+    state_specs, use_overlap, use_packed_bus, use_wire,
 )
 from . import checkpoint  # noqa: F401

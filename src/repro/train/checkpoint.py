@@ -13,6 +13,14 @@ payload (``slot[parity]``, stored as a logical tree) plus the parity bit —
 the dead slot is never serialized, and :func:`load_state` re-materializes a
 ``slot[2]`` whose live slot holds φ(t), so a resumed run reproduces the
 pipeline trajectory exactly.
+
+Policy groups (DESIGN §12) ride the same contract for free: a grouped
+:class:`~repro.core.bus.BusLayout` permutes leaf *rows* inside the bus,
+but the save path unpacks to the logical tree before anything touches
+disk — so checkpoints written under one group spec load under any other
+(1-group → 2-group, regrouped, or back to tree-resident), because
+``layout=`` on each side is only that side's row map.  ``_is_bus`` keys
+on the layout's total ``rows``, which includes every group's tail pad.
 """
 from __future__ import annotations
 

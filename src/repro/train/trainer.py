@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -19,14 +21,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core import (GossipSchedule, StaticSchedule, Topology,
-                        accumulate_f32, make_codec, make_edm_bus,
-                        make_edm_bus_ef, make_mixer, make_optimizer,
-                        make_overlap_mixer, make_schedule,
-                        make_schedule_mixer)
+from repro.core import (GossipSchedule, GroupPlan, StaticSchedule, Topology,
+                        accumulate_f32, build_mixer, make_codec,
+                        make_edm_bus, make_edm_bus_ef, make_group_mixer,
+                        make_optimizer, make_schedule)
 from repro.core.optimizers import DecOptimizer
 from repro.core.wire import WIRE_FORMATS, encode_ef
 from repro.core import bus as parambus
+from repro.core.bus import GroupSpec
 from repro.core.metrics import bus_consensus, bus_grad_norm, consensus_distance
 from repro.models.api import Model
 from repro.optim import scale_grads, warmup_cosine
@@ -34,7 +36,8 @@ from repro.optim import scale_grads, warmup_cosine
 __all__ = [
     "TrainState", "build_train_step", "init_state", "state_specs",
     "make_topology", "make_gossip_schedule", "gossip_round_step",
-    "prepend_agent_axis", "batch_spec_tree", "use_packed_bus",
+    "prepend_agent_axis", "batch_spec_tree", "Features", "resolve_features",
+    "resolve_group_specs", "make_group_plans", "use_packed_bus",
     "use_overlap", "use_wire", "bus_layout_for",
 ]
 
@@ -100,81 +103,220 @@ def gossip_round_step(step, gossip_every: int):
     return step // gossip_every if gossip_every > 1 else step
 
 
-def use_packed_bus(run: RunConfig) -> bool:
-    """Resolve ``RunConfig.packed_bus`` (DESIGN §5): explicit True/False
-    wins; the None default turns the bus on for the production
-    ``algorithm="edm"`` + ``gossip_engine="ppermute"`` combination, where
-    per-leaf launches and permutes dominate the step.
+@dataclasses.dataclass(frozen=True)
+class Features:
+    """The resolved feature matrix of a :class:`RunConfig` — what the
+    train step will actually run (DESIGN §5/§6/§9/§12 fallback matrix,
+    validated in ONE place by :func:`resolve_features`).
 
-    ``agents="pod"`` composes too (DESIGN §7): the bus has no weight dim,
-    so FSDP shards its *row* axis instead — each agent's ``(rows, 128)``
-    superbuffer is row-sharded over the pod-internal ``data`` axis and
-    gossip runs shard-locally."""
+    ``packed_bus``: bus-resident EDM step.  ``overlap``: the delayed
+    gossip pipeline.  ``wire``: the run-level error-feedback wire format
+    ("f32" = byte-identical legacy wire).  ``groups``: the policy-group
+    specs (empty tuple = the single default "dense" group, bit-identical
+    to the ungrouped bus)."""
+
+    packed_bus: bool
+    overlap: bool
+    wire: str
+    groups: Tuple[GroupSpec, ...] = ()
+
+    @property
+    def grouped(self) -> bool:
+        return bool(self.groups)
+
+
+def resolve_group_specs(run: RunConfig) -> Tuple[GroupSpec, ...]:
+    """Parse ``RunConfig.gossip_groups`` into :class:`GroupSpec`s.
+
+    Accepts ``""`` (no groups — the default single-group bus), a JSON
+    list (the ``--gossip-groups`` CLI payload, see
+    :func:`repro.core.bus.group_specs_from_json`), or comma-separated
+    presets: ``moe[:k]`` (expert leaves, default opt-out k=0) and
+    ``ssm[:k]`` (conv/SSM state leaves, default local-only k=0) — ``k``
+    is the group's ``gossip_every`` (0 = never gossip, k>1 slow-cycle).
+    """
+    spec = (run.gossip_groups or "").strip()
+    if not spec:
+        return ()
+    if spec.startswith("["):
+        return parambus.group_specs_from_json(json.loads(spec))
+    specs = []
+    for tok in spec.split(","):
+        name, _, every = tok.strip().partition(":")
+        k = int(every) if every else 0
+        if name == "moe":
+            from repro.models.moe import expert_group_spec
+            specs.append(expert_group_spec(gossip_every=k))
+        elif name == "ssm":
+            from repro.models.mamba import ssm_state_group_spec
+            specs.append(ssm_state_group_spec(gossip_every=k))
+        else:
+            raise AssertionError(
+                f"unknown gossip-groups preset {name!r}: expected 'moe[:k]',"
+                " 'ssm[:k]', or a JSON list of group specs "
+                '([{"name": ..., "match": [...], "gossip_every": ..., '
+                '"wire": ...}, ...])')
+    return tuple(specs)
+
+
+def resolve_features(run: RunConfig) -> Features:
+    """Resolve a :class:`RunConfig` to its :class:`Features` — THE
+    validation point for the feature compatibility matrix.
+
+    * packed bus (DESIGN §5): explicit ``run.packed_bus`` wins; the None
+      default turns it on for the production ``algorithm="edm"`` +
+      ``gossip_engine="ppermute"`` combination.  Requires
+      ``algorithm="edm"`` and ``agents in ("data", "pod")``.
+    * overlap (DESIGN §6): ``"delayed"`` needs the packed bus (ONE
+      in-flight buffer), ``gossip_every == 1`` (a payload in flight every
+      step) and no ``gossip_dtype`` cast.
+    * wire (DESIGN §9): bf16/int8 need the packed bus (bus-shaped EF
+      residual) and exclude the ``gossip_dtype`` cast lever.
+    * policy groups (DESIGN §12): need the packed bus (groups are row
+      ranges of the superbuffer), run-level ``gossip_every == 1`` (the
+      cadence moves into each group), an f32 run-level wire (per-group
+      wire formats are stateless; the EF residual is a whole-bus,
+      single-group feature), no overlap, and no ``gossip_dtype`` cast.
+
+    Every violation raises with the lever to flip.  The legacy
+    ``use_packed_bus`` / ``use_overlap`` / ``use_wire`` helpers are thin
+    deprecated wrappers over this function.
+    """
     if run.packed_bus is not None:
-        if run.packed_bus:
+        packed = run.packed_bus
+        if packed:
             assert run.algorithm == "edm", \
-                f"packed_bus supports algorithm='edm', got {run.algorithm!r}"
+                f"packed_bus supports algorithm='edm', got " \
+                f"{run.algorithm!r} — unset packed_bus or switch algorithm"
             assert run.agents in ("data", "pod"), \
                 f"packed_bus supports agents='data'|'pod', got {run.agents!r}"
-        return run.packed_bus
-    return (run.algorithm == "edm" and run.gossip_engine == "ppermute"
-            and run.agents in ("data", "pod"))
+    else:
+        packed = (run.algorithm == "edm" and run.gossip_engine == "ppermute"
+                  and run.agents in ("data", "pod"))
 
-
-def use_overlap(run: RunConfig) -> bool:
-    """Resolve ``RunConfig.overlap`` (DESIGN §6).  ``"delayed"`` runs the
-    overlapped gossip pipeline: the live payload's permutes are issued
-    before the backward pass and combined after it (one-step-stale mixing).
-    It composes only with the configurations in the §6 fallback matrix —
-    packed bus (the payload must be ONE buffer), ``gossip_every == 1``
-    (the pipeline always has a payload in flight) and an f32 wire."""
     if run.overlap in ("off", "", None):
-        return False
-    assert run.overlap == "delayed", \
-        f"RunConfig.overlap must be 'off' or 'delayed', got {run.overlap!r}"
-    assert use_packed_bus(run), \
-        "overlap='delayed' needs the packed bus (DESIGN §6): the in-flight " \
-        "payload is one (A, rows, 128) buffer, not a leaf set"
-    assert run.gossip_every == 1, \
-        "overlap='delayed' composes with gossip_every=1 only (the pipeline " \
-        "keeps a payload in flight every step)"
-    assert run.gossip_dtype in ("float32", "", None), \
-        "overlap='delayed' rejects the gossip_dtype cast lever (a " \
-        "synchronous-path lever; use the error-feedback wire codec " \
-        "RunConfig.wire instead — it composes, DESIGN §6/§9 fallback matrix)"
-    return True
+        overlap = False
+    else:
+        assert run.overlap == "delayed", \
+            f"RunConfig.overlap must be 'off' or 'delayed', got " \
+            f"{run.overlap!r}"
+        assert packed, \
+            "overlap='delayed' needs the packed bus (DESIGN §6): the " \
+            "in-flight payload is one (A, rows, 128) buffer, not a leaf " \
+            "set — use algorithm='edm' with gossip_engine='ppermute' or " \
+            "packed_bus=True"
+        assert run.gossip_every == 1, \
+            "overlap='delayed' composes with gossip_every=1 only (the " \
+            "pipeline keeps a payload in flight every step)"
+        assert run.gossip_dtype in ("float32", "", None), \
+            "overlap='delayed' rejects the gossip_dtype cast lever (a " \
+            "synchronous-path lever; use the error-feedback wire codec " \
+            "RunConfig.wire instead — it composes, DESIGN §6/§9 fallback " \
+            "matrix)"
+        overlap = True
 
-
-def use_wire(run: RunConfig) -> str:
-    """Resolve ``RunConfig.wire`` (DESIGN §9) to a wire format string.
-
-    ``"f32"`` is the byte-identical legacy wire on every path.  ``"bf16"``
-    and ``"int8"`` require the packed bus (the codec operates on the
-    ``(A, rows, 128)`` superbuffer and the residual is bus-shaped) and are
-    mutually exclusive with the ``gossip_dtype`` cast lever — the codec
-    subsumes it: same 2× bytes at bf16, but error-feedback-correct and
-    composing with ``overlap="delayed"`` and ``agents="pod"``."""
     fmt = run.wire or "f32"
     assert fmt in WIRE_FORMATS, \
         f"RunConfig.wire must be one of {WIRE_FORMATS}, got {fmt!r}"
-    if fmt == "f32":
-        return fmt
-    assert use_packed_bus(run), \
-        "wire != 'f32' needs the packed bus (DESIGN §9): the codec and the " \
-        "bus-resident residual operate on the (A, rows, 128) superbuffer"
-    assert run.gossip_dtype in ("float32", "", None), \
-        "wire != 'f32' is mutually exclusive with gossip_dtype != float32 " \
-        "(the error-feedback codec replaces the cast-on-wire lever)"
-    return fmt
+    if fmt != "f32":
+        assert packed, \
+            "wire != 'f32' needs the packed bus (DESIGN §9): the codec " \
+            "and the bus-resident residual operate on the (A, rows, 128) " \
+            "superbuffer"
+        assert run.gossip_dtype in ("float32", "", None), \
+            "wire != 'f32' is mutually exclusive with gossip_dtype != " \
+            "float32 (the error-feedback codec replaces the cast-on-wire " \
+            "lever)"
+
+    groups = resolve_group_specs(run)
+    if groups:
+        assert packed, \
+            "gossip_groups need the packed bus (DESIGN §12): policy " \
+            "groups are row ranges of the (A, rows, 128) superbuffer — " \
+            "use algorithm='edm' with gossip_engine='ppermute' or " \
+            "packed_bus=True"
+        assert run.gossip_every == 1, \
+            "gossip_groups replace the run-level gossip_every: set " \
+            "gossip_every=1 and put the cadence on each group's " \
+            "gossip_every instead (DESIGN §12)"
+        assert not overlap, \
+            "gossip_groups do not compose with overlap='delayed' yet (the " \
+            "pipeline carries ONE whole-bus payload; per-group staleness " \
+            "is future work) — run overlap='off'"
+        assert fmt == "f32", \
+            "gossip_groups exclude the run-level error-feedback wire " \
+            "(the EF residual is whole-bus); set per-group wire formats " \
+            "in the group specs instead (stateless quantization)"
+        assert run.gossip_dtype in ("float32", "", None), \
+            "gossip_groups exclude the gossip_dtype cast lever; set " \
+            "per-group wire formats in the group specs instead"
+    return Features(packed, overlap, fmt, groups)
 
 
-def bus_layout_for(model: Model, n_agents: int,
-                   shards: int = 1) -> parambus.BusLayout:
+def use_packed_bus(run: RunConfig) -> bool:
+    """Deprecated: use :func:`resolve_features`\\ ``(run).packed_bus``."""
+    warnings.warn("use_packed_bus(run) is deprecated; use "
+                  "resolve_features(run).packed_bus", DeprecationWarning,
+                  stacklevel=2)
+    return resolve_features(run).packed_bus
+
+
+def use_overlap(run: RunConfig) -> bool:
+    """Deprecated: use :func:`resolve_features`\\ ``(run).overlap``."""
+    warnings.warn("use_overlap(run) is deprecated; use "
+                  "resolve_features(run).overlap", DeprecationWarning,
+                  stacklevel=2)
+    return resolve_features(run).overlap
+
+
+def use_wire(run: RunConfig) -> str:
+    """Deprecated: use :func:`resolve_features`\\ ``(run).wire``."""
+    warnings.warn("use_wire(run) is deprecated; use "
+                  "resolve_features(run).wire", DeprecationWarning,
+                  stacklevel=2)
+    return resolve_features(run).wire
+
+
+def bus_layout_for(model: Model, n_agents: int, shards: int = 1,
+                   groups: Tuple[GroupSpec, ...] = ()) -> parambus.BusLayout:
     """Cached bus layout of ``model``'s parameter tree with a leading agent
     axis — the single layout object shared by ``init_state``, the train
     step and checkpointing (shape-only, no allocation).  ``shards`` is the
-    FSDP row-shard count of the shard-resident mode (DESIGN §7)."""
-    return parambus.layout_of(model, n_agents, shards=shards)
+    FSDP row-shard count of the shard-resident mode (DESIGN §7);
+    ``groups`` the policy-group specs (DESIGN §12, usually
+    ``resolve_features(run).groups``)."""
+    return parambus.layout_of(model, n_agents, shards=shards,
+                              groups=tuple(groups) or None)
+
+
+def make_group_plans(run: RunConfig, layout: parambus.BusLayout,
+                     sched: GossipSchedule, pods: int = 1):
+    """Resolve a grouped layout into per-group :class:`GroupPlan`s.
+
+    Every gossiping group gets its schedule — the run's ``sched`` unless
+    the group names an override — and **Assumption 1 is re-checked per
+    group** (each group's round sequence must be doubly stochastic with
+    positive diagonal and a positive period-product spectral gap on the
+    gossiping block); a policy that breaks mixing for any group fails at
+    build time.  Opt-out groups (``gossip_every == 0``) carry no schedule
+    and no codec — the group mixer never builds collectives for their
+    rows.  Per-group wire formats resolve to stateless codecs on the
+    layout's block grid.
+    """
+    plans = []
+    for g in layout.groups:
+        if g.gossip_every == 0 or g.rows == 0:
+            plans.append(GroupPlan(g, None, None))
+            continue
+        gsched = sched
+        if g.schedule:
+            grun = dataclasses.replace(run, gossip_schedule=g.schedule)
+            gsched = make_gossip_schedule(grun, sched.n_agents, pods)
+        gsched.check_assumption1()
+        codec = (make_codec(g.wire, layout.block_rows)
+                 if g.wire != "f32" else None)
+        plans.append(GroupPlan(g, gsched, codec))
+    return plans
 
 
 def _cast_mixer(mix, dtype: Optional[str]):
@@ -190,7 +332,7 @@ def _cast_mixer(mix, dtype: Optional[str]):
 def build_train_step(model: Model, run: RunConfig, topo,
                      use_fused_kernel: bool = False, mesh=None,
                      agent_axes=None, shard_axes=None,
-                     straggler_plan=None) -> Callable:
+                     straggler_plan=None, pods: int = 1) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch leaves: (A, per_agent_batch, ...).
@@ -241,9 +383,10 @@ def build_train_step(model: Model, run: RunConfig, topo,
     the liveness-degraded round of the step's epoch.
     """
     sched = topo if isinstance(topo, GossipSchedule) else StaticSchedule(topo)
-    overlap = use_overlap(run)
+    feats = resolve_features(run)
+    overlap = feats.overlap
     kw = dict(use_fused_kernel=use_fused_kernel) if run.algorithm == "edm" else {}
-    packed = use_packed_bus(run)
+    packed = feats.packed_bus
     shards = 1
     bus_spec = None
     if shard_axes is not None:
@@ -254,9 +397,11 @@ def build_train_step(model: Model, run: RunConfig, topo,
         agent_entry = (tuple(agent_axes)
                        if isinstance(agent_axes, (tuple, list)) else agent_axes)
         bus_spec = P(agent_entry, shard_axes)
-    layout = (bus_layout_for(model, sched.n_agents, shards=shards)
+    layout = (bus_layout_for(model, sched.n_agents, shards=shards,
+                             groups=feats.groups)
               if packed else None)
-    wire_fmt = use_wire(run)
+    grouped = packed and layout.is_grouped
+    wire_fmt = feats.wire
     # the codec's int8 scale blocks ARE the layout's (block_rows, 128) grid
     # tiles, and rows is a multiple of block_rows × shards — shard-local
     # encode/decode by construction (DESIGN §9).
@@ -303,11 +448,20 @@ def build_train_step(model: Model, run: RunConfig, topo,
                                    bus_spec))(x, g, m, psi, e)
 
     base_mix = None
-    if not overlap:
-        base_mix = make_schedule_mixer(
-            sched, engine=run.gossip_engine, mesh=mesh, agent_axes=agent_axes,
-            use_fused_kernel=use_fused_kernel, shard_axes=shard_axes,
-            wire=codec)
+    if grouped:
+        # group-aware bus mixer (DESIGN §12): one permute plan per active
+        # group per step — opt-out rows never touch a collective, and each
+        # group runs its own cadence / schedule / wire codec.  Assumption 1
+        # is re-checked per group inside make_group_plans.
+        base_mix = make_group_mixer(
+            make_group_plans(run, layout, sched, pods),
+            engine=run.gossip_engine, mesh=mesh, agent_axes=agent_axes,
+            use_fused_kernel=use_fused_kernel, shard_axes=shard_axes)
+    elif not overlap:
+        base_mix = build_mixer(
+            sched, mode="schedule", engine=run.gossip_engine, mesh=mesh,
+            agent_axes=agent_axes, use_fused_kernel=use_fused_kernel,
+            shard_axes=shard_axes, wire=codec)
 
     def opt_at(step, mix_override=None):
         """Algorithm with the mixer bound to ``step``'s gossip round (the
@@ -370,8 +524,8 @@ def build_train_step(model: Model, run: RunConfig, topo,
         "synchronous step has no payload stack to degrade)"
 
     if overlap:
-        issue, complete = make_overlap_mixer(
-            sched, engine=run.gossip_engine, mesh=mesh,
+        issue, complete = build_mixer(
+            sched, mode="overlap", engine=run.gossip_engine, mesh=mesh,
             agent_axes=agent_axes, use_fused_kernel=use_fused_kernel,
             shard_axes=shard_axes, wire=codec)
         if straggler_plan is not None:
@@ -508,22 +662,24 @@ def init_state(model: Model, run: RunConfig, n_agents: int, key,
     params1 = model.init(key)
     params = jax.tree.map(
         lambda l: jnp.broadcast_to(l[None], (n_agents,) + l.shape), params1)
-    if use_packed_bus(run):
-        layout = bus_layout_for(model, n_agents, shards=shards)
+    feats = resolve_features(run)
+    if feats.packed_bus:
+        layout = bus_layout_for(model, n_agents, shards=shards,
+                                groups=feats.groups)
         x_bus = parambus.pack_tree(layout, params)
         opt = make_edm_bus(run.alpha, run.beta, mix=lambda t: t,
                            block_rows=layout.block_rows)
         opt_state = opt.init(x_bus)
-        if use_wire(run) != "f32":
+        if feats.wire != "f32":
             # bus-shaped EF residual (DESIGN §9), e(0) = 0: step 0 then
             # sends Q(φ(0)) exactly like the synchronous compressed step.
             opt_state["e"] = jnp.zeros_like(x_bus)
         state = {"params": x_bus, "opt": opt_state,
                  "step": jnp.zeros((), jnp.int32)}
-        if use_overlap(run):
+        if feats.overlap:
             state["pipeline"] = parambus.make_pipeline(x_bus)
         return state
-    mix = make_mixer(make_topology(run, n_agents))
+    mix = build_mixer(make_topology(run, n_agents), mode="static")
     opt = make_optimizer(run.algorithm, alpha=run.alpha, beta=run.beta, mix=mix)
     return {"params": params, "opt": opt.init(params),
             "step": jnp.zeros((), jnp.int32)}
@@ -553,7 +709,8 @@ def prepend_agent_axis(spec: P, agent_axis, fsdp_axis: Optional[str] = None) -> 
 
 def state_specs(model: Model, run: RunConfig, multi_pod: bool) -> Dict[str, Any]:
     """PartitionSpecs for the TrainState under the chosen agent granularity."""
-    if use_packed_bus(run):
+    feats = resolve_features(run)
+    if feats.packed_bus:
         if run.agents == "pod":
             # shard-resident bus (DESIGN §7): agent axis on 'pod', the
             # bus ROW axis FSDP-sharded over the pod-internal 'data' axis.
@@ -565,10 +722,10 @@ def state_specs(model: Model, run: RunConfig, multi_pod: bool) -> Dict[str, Any]
             agent_axis = ("pod", "data") if multi_pod else "data"
             spec = P(agent_axis)
         opt_specs = {"m": spec, "psi": spec}
-        if use_wire(run) != "f32":
+        if feats.wire != "f32":
             opt_specs["e"] = spec   # bus-shaped residual shards like the bus
         specs = {"params": spec, "opt": opt_specs, "step": P()}
-        if use_overlap(run):
+        if feats.overlap:
             # slot: (2, A, rows, 128) — the 2-slot dim replicated, then the
             # bus spec shifted right by one; parity is a replicated scalar.
             specs["pipeline"] = {"slot": P(None, *spec), "parity": P()}
